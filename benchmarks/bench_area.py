@@ -1,0 +1,31 @@
+"""Paper §III.B-C: area-model calibration + Titan X validation."""
+
+from __future__ import annotations
+
+from repro.core.area import (
+    GTX980,
+    GTX980_DIE_MM2,
+    MAXWELL,
+    TITAN_X,
+    TITAN_X_DIE_MM2,
+    cacheless,
+)
+
+from .common import emit, timed
+
+
+def run() -> None:
+    (a980, us) = timed(MAXWELL.area_point, GTX980)
+    emit(
+        "area_gtx980_mm2", us,
+        f"{a980:.1f} (published 398; err {100*(a980-GTX980_DIE_MM2)/GTX980_DIE_MM2:+.2f}%)",
+    )
+    atx, us = timed(MAXWELL.area_point, TITAN_X)
+    emit(
+        "area_titanx_mm2", us,
+        f"{atx:.1f} (published 601; err {100*(atx-TITAN_X_DIE_MM2)/TITAN_X_DIE_MM2:+.2f}%; paper claims -1.96%)",
+    )
+    c980, us = timed(MAXWELL.area_point, cacheless(GTX980))
+    emit("area_gtx980_cacheless_mm2", us, f"{c980:.1f} (paper: 237)")
+    ctx, us = timed(MAXWELL.area_point, cacheless(TITAN_X))
+    emit("area_titanx_cacheless_mm2", us, f"{ctx:.1f} (paper: 356)")

@@ -1,0 +1,56 @@
+"""Paper §V.A: the cache-removal comparison -- codesigned cache-less designs
+vs stock GPUs at (a) equal total area and (b) equal cache-less area."""
+
+from __future__ import annotations
+
+import time
+
+from repro.core import GTX980, MAXWELL, TITAN_X, cacheless, codesign, enumerate_hw_space
+from repro.core.codesign import evaluate_fixed_hw
+from repro.core.workload import paper_workload
+
+from .common import cache_json, emit
+
+#: §V.A reported numbers for the derived column
+PAPER = {
+    ("2d", "gtx980"): 9.34, ("2d", "titanx"): 28.44,
+    ("3d", "gtx980"): 9.22, ("3d", "titanx"): 33.15,
+}
+
+
+def _solve() -> dict:
+    out = {}
+    hw = enumerate_hw_space(MAXWELL, max_area=650.0)
+    for cls, names in (
+        ("2d", ["jacobi2d", "heat2d", "laplacian2d", "gradient2d"]),
+        ("3d", ["heat3d", "laplacian3d"]),
+    ):
+        wl = paper_workload(names)
+        t0 = time.perf_counter()
+        res = codesign(wl, hw=hw)
+        dt = time.perf_counter() - t0
+        for gpu, point in (("gtx980", GTX980), ("titanx", TITAN_X)):
+            _, stock = evaluate_fixed_hw(wl, point)
+            a_less = MAXWELL.area_point(cacheless(point))
+            _, best_less = res.best(max_area=a_less)
+            out[f"{cls}_{gpu}"] = {
+                "stock_gflops": stock,
+                "cacheless_area": a_less,
+                "best_at_cacheless_area": best_less,
+                "improvement_pct": 100 * (best_less / stock - 1),
+                "solve_s": dt,
+            }
+    return out
+
+
+def run() -> None:
+    table = cache_json("cache_removal", _solve)
+    for key, r in table.items():
+        cls, gpu = key.split("_")
+        emit(
+            f"cacheless_{key}", r["solve_s"] * 1e6,
+            f"stock {r['stock_gflops']:.0f} GFLOP/s vs codesigned "
+            f"{r['best_at_cacheless_area']:.0f} @ cache-less area "
+            f"{r['cacheless_area']:.0f} mm^2 (+{r['improvement_pct']:.1f}%; "
+            f"paper: +{PAPER[(cls, gpu)]:.2f}%)",
+        )

@@ -1,0 +1,40 @@
+"""The TPU codesign bridge (beyond-paper): eq.-18 mesh/software optimization
+for three representative cells, with the analytic Pareto of chips vs step
+time (the Fig.-3 analogue on the fleet)."""
+
+from __future__ import annotations
+
+import time
+
+from repro.configs.base import SHAPES, get_arch
+from repro.core.meshopt import optimize
+from repro.models.model import active_params, count_params
+
+from .common import emit
+
+CELLS = [
+    ("llama3-8b", "train_4k"),
+    ("deepseek-v3-671b", "train_4k"),
+    ("mixtral-8x22b", "decode_32k"),
+]
+
+
+def run() -> None:
+    for arch, shape_name in CELLS:
+        cfg = get_arch(arch)
+        shape = SHAPES[shape_name]
+        t0 = time.perf_counter()
+        n, na = count_params(cfg), active_params(cfg)
+        plans = optimize(cfg, shape, n, na, chips=256, top_k=3)
+        us = (time.perf_counter() - t0) * 1e6
+        if not plans:
+            emit(f"meshopt_{arch}_{shape_name}", us, "no feasible plan at 256 chips")
+            continue
+        p = plans[0]
+        mp = p["plan"]
+        emit(
+            f"meshopt_{arch}_{shape_name}", us,
+            f"best: data={mp['data']} model={mp['model']} mb={mp['microbatches']} "
+            f"remat={mp['remat']} fsdp={mp['fsdp']} -> {p['bound_s']*1e3:.1f} ms/step "
+            f"({p['dominant']}-bound; {len(plans)} feasible shown)",
+        )

@@ -1,0 +1,74 @@
+"""Paper Fig. 3: design-space exploration + Pareto fronts, 2D & 3D classes,
+with the stock-GPU comparison points and improvement percentages."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import GTX980, MAXWELL, TITAN_X, codesign, enumerate_hw_space
+from repro.core.codesign import evaluate_fixed_hw
+from repro.core.pareto import pareto_mask
+from repro.core.workload import paper_workload
+
+from .common import cache_json, emit
+
+CLASSES = {
+    "2d": ["jacobi2d", "heat2d", "laplacian2d", "gradient2d"],
+    "3d": ["heat3d", "laplacian3d"],
+}
+# paper-reported improvements for the same comparisons (for the derived col)
+PAPER = {
+    ("2d", "gtx980"): 104.0,
+    ("2d", "titanx"): 69.0,
+    ("3d", "gtx980"): 123.0,
+    ("3d", "titanx"): 126.0,
+}
+
+
+def _solve(cls: str) -> dict:
+    wl = paper_workload(CLASSES[cls], name=f"paper-{cls}")
+    hw = enumerate_hw_space(MAXWELL, max_area=650.0)
+    t0 = time.perf_counter()
+    res = codesign(wl, hw=hw)
+    solve_s = time.perf_counter() - t0
+    g = res.gflops()
+    mask = pareto_mask(hw.area, g)
+    out = {
+        "n_designs": int(len(hw)),
+        "n_pareto": int(mask.sum()),
+        "solve_s": solve_s,
+        "pareto_area": hw.area[mask].tolist(),
+        "pareto_gflops": g[mask].tolist(),
+    }
+    for name, point in (("gtx980", GTX980), ("titanx", TITAN_X)):
+        _, stock = evaluate_fixed_hw(wl, point)
+        a = MAXWELL.area_point(point)
+        i, best = res.best(max_area=a)
+        out[name] = {
+            "stock_gflops": stock,
+            "best_gflops": best,
+            "area": a,
+            "improvement_pct": 100 * (best / stock - 1),
+            "best_hw": vars(res.hw.point(i)),
+        }
+    return out
+
+
+def run() -> None:
+    for cls in CLASSES:
+        r = cache_json(f"pareto_{cls}", lambda cls=cls: _solve(cls))
+        us = r["solve_s"] * 1e6
+        emit(
+            f"pareto_{cls}_designs", us,
+            f"{r['n_designs']} feasible; {r['n_pareto']} Pareto "
+            f"({100*r['n_pareto']/r['n_designs']:.1f}%; paper: ~1%)",
+        )
+        for gpu in ("gtx980", "titanx"):
+            d = r[gpu]
+            emit(
+                f"pareto_{cls}_vs_{gpu}", us,
+                f"stock {d['stock_gflops']:.0f} -> codesigned {d['best_gflops']:.0f} "
+                f"GFLOP/s (+{d['improvement_pct']:.0f}%; paper: +{PAPER[(cls, gpu)]:.0f}%)",
+            )

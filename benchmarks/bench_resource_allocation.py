@@ -1,0 +1,43 @@
+"""Paper Fig. 4: resource allocation -- fraction of die area spent on
+memory vs vector units across the design space, and the clustering of the
+Pareto-optimal points."""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.core import MAXWELL, HardwarePoint
+from repro.core.pareto import pareto_mask
+
+from .common import ARTIFACTS, emit
+
+
+def run() -> None:
+    # reuse the Fig.-3 artifacts (bench_pareto must run first in the suite)
+    for cls in ("2d", "3d"):
+        path = os.path.join(ARTIFACTS, f"pareto_{cls}.json")
+        if not os.path.exists(path):
+            emit(f"resource_alloc_{cls}", 0.0, "skipped (run bench_pareto first)")
+            continue
+        t0 = time.perf_counter()
+        with open(path) as f:
+            r = json.load(f)
+        fracs_mem, fracs_vu = [], []
+        for hwdict in [r["gtx980"]["best_hw"], r["titanx"]["best_hw"]]:
+            p = HardwarePoint(
+                n_sm=hwdict["n_sm"], n_v=hwdict["n_v"], m_sm=hwdict["m_sm"]
+            )
+            b = MAXWELL.breakdown(p)
+            total = sum(b.values())
+            fracs_mem.append(100 * (b["shared_memory"] + b["register_files"]) / total)
+            fracs_vu.append(100 * b["vector_units"] / total)
+        us = (time.perf_counter() - t0) * 1e6
+        emit(
+            f"resource_alloc_{cls}", us,
+            f"Pareto designs spend {np.mean(fracs_vu):.0f}% die on vector units / "
+            f"{np.mean(fracs_mem):.0f}% on scratchpad+RF (paper Fig. 4: optima cluster)",
+        )

@@ -1,0 +1,46 @@
+"""Roofline summary over the dry-run artifacts (EXPERIMENTS.md §Roofline
+is generated from the same data; this bench prints the headline numbers)."""
+
+from __future__ import annotations
+
+import time
+
+from repro.configs.base import SHAPES
+from repro.launch.roofline import analyze_cell, load_cells
+
+from .common import ARTIFACTS, emit
+
+DRYRUN = ARTIFACTS + "/dryrun"
+
+
+def run() -> None:
+    t0 = time.perf_counter()
+    rows = []
+    for rec in load_cells(DRYRUN, "single"):
+        row = analyze_cell(rec, SHAPES)
+        if row:
+            rows.append(row)
+    us = (time.perf_counter() - t0) * 1e6
+    if not rows:
+        emit("roofline", us, "skipped (run repro.launch.dryrun first)")
+        return
+    emit("roofline_cells", us, f"{len(rows)} cells analyzed (single-pod)")
+    by_dom = {}
+    for r in rows:
+        by_dom.setdefault(r["dominant"], []).append(r)
+    for dom, rs in sorted(by_dom.items()):
+        emit(
+            f"roofline_{dom}_bound", us,
+            f"{len(rs)} cells; median roofline fraction "
+            f"{sorted(x['roofline_fraction'] for x in rs)[len(rs)//2]:.3f}",
+        )
+    best = max(rows, key=lambda r: r["roofline_fraction"])
+    worst = min(rows, key=lambda r: r["roofline_fraction"])
+    emit(
+        "roofline_best", us,
+        f"{best['arch']}/{best['shape']}: {best['roofline_fraction']:.3f} ({best['dominant']}-bound)",
+    )
+    emit(
+        "roofline_worst", us,
+        f"{worst['arch']}/{worst['shape']}: {worst['roofline_fraction']:.3f} ({worst['dominant']}-bound)",
+    )

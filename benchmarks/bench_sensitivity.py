@@ -1,0 +1,62 @@
+"""Paper Table II: workload sensitivity -- per-stencil optimal architecture
+in the 425-450 mm^2 band, computed 'for free' from cached cell times
+(§V.B re-weighting)."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import MAXWELL, codesign, enumerate_hw_space
+from repro.core.workload import paper_workload
+
+from .common import cache_json, emit
+
+#: paper Table II rows (n_SM, n_V, M_SM, area, GFLOP/s) for the derived col
+PAPER_TABLE = {
+    "jacobi2d": (32, 128, 24, 438, 2059),
+    "heat2d": (22, 256, 12, 447, 3017),
+    "gradient2d": (28, 160, 24, 431, 4963),
+    "laplacian2d": (28, 160, 12, 426, 2549),
+    "heat3d": (18, 288, 192, 447, 3600),
+    "laplacian3d": (8, 896, 96, 446, 1427),
+}
+
+
+def _solve() -> dict:
+    out = {}
+    hw = enumerate_hw_space(MAXWELL, max_area=650.0)
+    for cls in (["jacobi2d", "heat2d", "laplacian2d", "gradient2d"],
+                ["heat3d", "laplacian3d"]):
+        wl = paper_workload(cls)
+        t0 = time.perf_counter()
+        res = codesign(wl, hw=hw)
+        solve_s = time.perf_counter() - t0
+        cells = list(wl.cells)
+        for name in cls:
+            freqs = np.array(
+                [1.0 / 16 if c.stencil.name == name else 0.0 for c in cells]
+            )
+            g = res.gflops(freqs)
+            g = np.where((hw.area >= 425) & (hw.area <= 450), g, -np.inf)
+            i = int(np.argmax(g))
+            p = res.hw.point(i)
+            out[name] = {
+                "n_sm": p.n_sm, "n_v": p.n_v, "m_sm": p.m_sm,
+                "area": float(hw.area[i]), "gflops": float(g[i]),
+                "solve_s": solve_s,
+            }
+    return out
+
+
+def run() -> None:
+    table = cache_json("sensitivity", _solve)
+    for name, r in table.items():
+        ps = PAPER_TABLE[name]
+        emit(
+            f"sensitivity_{name}", r["solve_s"] * 1e6,
+            f"n_SM={r['n_sm']} n_V={r['n_v']} M_SM={r['m_sm']:.0f} "
+            f"area={r['area']:.0f} {r['gflops']:.0f} GFLOP/s "
+            f"(paper: n_SM={ps[0]} n_V={ps[1]} M_SM={ps[2]} {ps[4]} GFLOP/s)",
+        )

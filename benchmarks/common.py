@@ -1,0 +1,38 @@
+"""Shared benchmark utilities: timing + CSV emission + artifact cache."""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Callable, Dict
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "artifacts")
+
+
+def timed(fn: Callable, *args, repeats: int = 3, **kw):
+    """(result, best microseconds per call)."""
+    best = float("inf")
+    out = None
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        best = min(best, (time.perf_counter() - t0) * 1e6)
+    return out, best
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    """The harness CSV contract: name,us_per_call,derived."""
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def cache_json(key: str, compute: Callable[[], Dict], force: bool = False) -> Dict:
+    os.makedirs(ARTIFACTS, exist_ok=True)
+    path = os.path.join(ARTIFACTS, key + ".json")
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            return json.load(f)
+    out = compute()
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1)
+    return out

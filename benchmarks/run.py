@@ -1,0 +1,60 @@
+"""Benchmark suite driver: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines (harness contract).
+
+  bench_area                -- SIII.B-C  area calibration + validation
+  bench_pareto              -- Fig. 3    design space + Pareto fronts
+  bench_sensitivity         -- Table II  per-stencil optimal architectures
+  bench_cache_removal       -- SV.A      cache-less comparison
+  bench_resource_allocation -- Fig. 4    area-fraction clustering
+  bench_kernels             -- workload  Pallas stencil kernels vs oracle
+  bench_meshopt             -- beyond-paper: TPU mesh codesign (eq. 18)
+  bench_roofline            -- SRoofline summary from dry-run artifacts
+"""
+
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from . import (
+        bench_area,
+        bench_cache_removal,
+        bench_kernels,
+        bench_meshopt,
+        bench_pareto,
+        bench_resource_allocation,
+        bench_roofline,
+        bench_sensitivity,
+    )
+
+    suites = [
+        ("area", bench_area),
+        ("pareto", bench_pareto),
+        ("sensitivity", bench_sensitivity),
+        ("cache_removal", bench_cache_removal),
+        ("resource_allocation", bench_resource_allocation),
+        ("kernels", bench_kernels),
+        ("meshopt", bench_meshopt),
+        ("roofline", bench_roofline),
+    ]
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    failed = []
+    print("name,us_per_call,derived")
+    for name, mod in suites:
+        if only and only != name:
+            continue
+        try:
+            mod.run()
+        except Exception:  # noqa: BLE001
+            failed.append(name)
+            traceback.print_exc()
+    if failed:
+        print(f"FAILED suites: {failed}", file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""Quickstart: the paper's codesign loop in ~40 lines.
+
+1. characterize a workload (2 stencils x the paper's size grid),
+2. enumerate the hardware space under an area budget (eq. 8),
+3. solve the per-cell tile-size problems (eq. 18 separability),
+4. extract the Pareto front and compare against the stock GTX-980.
+
+Run: PYTHONPATH=src python examples/quickstart.py
+"""
+
+import numpy as np
+
+from repro.core import MAXWELL, GTX980, codesign, enumerate_hw_space, pareto_front
+from repro.core.codesign import evaluate_fixed_hw
+from repro.core.workload import paper_workload
+
+wl = paper_workload(["jacobi2d", "heat2d"], name="quickstart")
+hw = enumerate_hw_space(MAXWELL, max_area=500.0)
+print(f"hardware design space: {len(hw)} feasible points <= 500 mm^2")
+
+res = codesign(wl, hw=hw)
+gflops = res.gflops()
+area = hw.area
+
+front_a, front_p, idx = pareto_front(area, gflops)
+print(f"Pareto-optimal designs: {len(idx)} ({100*len(idx)/len(hw):.1f}% of the space)")
+
+_, stock = evaluate_fixed_hw(wl, GTX980)
+best_i, best = res.best(max_area=MAXWELL.area_point(GTX980))
+pt = res.hw.point(best_i)
+print(f"stock GTX-980 (394.7 mm^2): {stock:8.1f} GFLOP/s")
+print(
+    f"best codesigned @ <= same area: {best:8.1f} GFLOP/s "
+    f"(+{100*(best/stock-1):.0f}%)  n_SM={pt.n_sm} n_V={pt.n_v} M_SM={pt.m_sm:.0f}kB"
+)
+print("\nPareto front (area mm^2 -> GFLOP/s):")
+for a, p in zip(front_a[::max(1, len(front_a)//10)], front_p[::max(1, len(front_p)//10)]):
+    print(f"  {a:7.1f} -> {p:8.1f}")

@@ -1,0 +1,63 @@
+"""Batched serving demo: prefill a batch of prompts, greedy-decode with the
+KV cache, verify against the cache-less reference.
+
+Run: PYTHONPATH=src python examples/serve_tiny_lm.py [--arch mixtral-8x22b]
+(any registered arch; the reduced config is used)
+"""
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import get_arch
+from repro.models import forward, init_model
+from repro.serve import generate
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--arch", default="mixtral-8x22b")
+ap.add_argument("--requests", type=int, default=4)
+ap.add_argument("--prompt-len", type=int, default=24)
+ap.add_argument("--gen-len", type=int, default=12)
+args = ap.parse_args()
+
+cfg = get_arch(args.arch).reduced()
+if cfg.moe:
+    cfg = dataclasses.replace(cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=16.0))
+params = init_model(cfg, jax.random.PRNGKey(0))
+
+batch = {
+    "tokens": jax.random.randint(
+        jax.random.PRNGKey(1), (args.requests, args.prompt_len), 0, cfg.vocab
+    )
+}
+if cfg.frontend or cfg.enc_dec:
+    batch["frontend"] = (
+        jax.random.normal(
+            jax.random.PRNGKey(2), (args.requests, cfg.n_frontend_tokens, cfg.d_model)
+        )
+        * 0.05
+    )
+
+t0 = time.perf_counter()
+out = generate(params, cfg, batch, steps=args.gen_len)
+out.block_until_ready()
+dt = time.perf_counter() - t0
+print(f"{args.arch} (reduced): {args.requests} requests x {args.gen_len} tokens")
+print(f"throughput: {args.requests*args.gen_len/dt:.1f} tok/s (CPU, incl. compile)")
+print("generations:\n", np.asarray(out))
+
+# consistency check vs teacher-forced full recompute (no cache)
+toks = batch["tokens"]
+for _ in range(args.gen_len):
+    logits, _, _ = forward(params, cfg, dict(batch, tokens=toks))
+    toks = jnp.concatenate(
+        [toks, jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)], axis=1
+    )
+ref = toks[:, args.prompt_len :]
+match = np.array_equal(np.asarray(out), np.asarray(ref))
+print("cache decode == cache-less reference:", match)
+assert match

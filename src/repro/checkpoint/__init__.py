@@ -1,0 +1,8 @@
+"""Checkpointing: atomic, async, mesh-shape-agnostic restore."""
+
+from .checkpoint import (  # noqa: F401
+    AsyncCheckpointer,
+    latest_step,
+    restore_checkpoint,
+    save_checkpoint,
+)

@@ -1,0 +1,13 @@
+"""Architecture + shape configuration registry (``--arch``, ``--shape``)."""
+
+from .base import (  # noqa: F401
+    ARCHS,
+    SHAPES,
+    ArchConfig,
+    AttnConfig,
+    MoEConfig,
+    ShapeSpec,
+    SSMConfig,
+    get_arch,
+    register,
+)

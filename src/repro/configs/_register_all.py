@@ -1,0 +1,14 @@
+"""Import every architecture module for registry side effects."""
+
+from . import (  # noqa: F401
+    deepseek_v3_671b,
+    gemma_7b,
+    internlm2_1_8b,
+    jamba_v0_1_52b,
+    llama3_8b,
+    mamba2_780m,
+    minitron_4b,
+    mixtral_8x22b,
+    qwen2_vl_2b,
+    whisper_medium,
+)

@@ -1,0 +1,5 @@
+"""The paper's own workload configs: the six stencils x the SZ grid,
+re-exported so launch scripts can select them with --arch-like names."""
+
+from repro.core.timemodel import STENCILS  # noqa: F401
+from repro.core.workload import paper_sizes, paper_workload  # noqa: F401

@@ -1,0 +1,32 @@
+"""Core library: the paper's contribution -- analytical area/time models and
+the non-linear codesign optimizer (plus the TPU re-instantiation used by the
+LM framework's mesh/sharding autotuner)."""
+
+from .area import (  # noqa: F401
+    GTX980,
+    MAXWELL,
+    TITAN_X,
+    HardwarePoint,
+    LinearAreaModel,
+    cacheless,
+)
+from .codesign import (  # noqa: F401
+    CodesignResult,
+    HardwareSpace,
+    codesign,
+    enumerate_hw_space,
+    evaluate_fixed_hw,
+)
+from .pareto import pareto_front, pareto_mask  # noqa: F401
+from .solver import LATTICE_2D, LATTICE_3D, TileLattice, refine_point, solve_cell  # noqa: F401
+from .timemodel import (  # noqa: F401
+    MAXWELL_GPU,
+    STENCILS,
+    TITANX_GPU,
+    GPUSpec,
+    ProblemSize,
+    StencilSpec,
+    stencil_gflops,
+    stencil_time,
+)
+from .workload import Workload, WorkloadCell, paper_sizes, paper_workload  # noqa: F401

@@ -1,0 +1,179 @@
+"""The codesign optimization driver (paper §IV, eqs. 7-18).
+
+Implements the separability decomposition of eq. (18): exhaustive
+enumeration of the hardware space ``HP`` x an independent tile-size
+minimization per (stencil, size) cell. Because the per-cell optima are
+cached as a ``(cells x hardware)`` matrix, the §V.B "workload sensitivity
+for free" analyses (re-weighting frequencies, single-stencil workloads)
+are simple matrix re-reductions -- no re-solving.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .area import GTX980, TITAN_X, HardwarePoint, LinearAreaModel, MAXWELL
+from .pareto import pareto_mask
+from .solver import LATTICE_2D, LATTICE_3D, TileLattice, decode_index, solve_cell
+from .timemodel import GPUSpec, MAXWELL_GPU, stencil_time
+from .workload import Workload
+
+__all__ = [
+    "HardwareSpace",
+    "CodesignResult",
+    "enumerate_hw_space",
+    "codesign",
+    "evaluate_fixed_hw",
+]
+
+#: Paper §IV.B parameter ranges: n_SM in [2, 32] even; n_V in [32, 2048]
+#: multiple of 32; M_SM multiples of 48 kB up to 480 kB, plus {12, 24, 36}.
+N_SM_RANGE = tuple(range(2, 33, 2))
+N_V_RANGE = tuple(range(32, 2049, 32))
+M_SM_RANGE = (12, 24, 36) + tuple(48 * j for j in range(1, 11))
+
+
+@dataclasses.dataclass
+class HardwareSpace:
+    """Flattened feasible hardware points + their (cache-less) areas."""
+
+    n_sm: np.ndarray
+    n_v: np.ndarray
+    m_sm: np.ndarray
+    area: np.ndarray
+
+    def __len__(self) -> int:
+        return self.n_sm.shape[0]
+
+    def point(self, i: int) -> HardwarePoint:
+        return HardwarePoint(
+            n_sm=int(self.n_sm[i]), n_v=int(self.n_v[i]), m_sm=float(self.m_sm[i])
+        )
+
+
+def enumerate_hw_space(
+    area_model: LinearAreaModel = MAXWELL,
+    max_area: float = 650.0,
+    min_area: float = 0.0,
+    n_sm_range: Sequence[int] = N_SM_RANGE,
+    n_v_range: Sequence[int] = N_V_RANGE,
+    m_sm_range: Sequence[int] = M_SM_RANGE,
+) -> HardwareSpace:
+    """All hardware points within the area budget. Proposed designs are
+    cache-less (§V.A: the HHC compiler performs explicit data transfers and
+    does not use caches), so L1 = L2 = 0 in the area term."""
+    n_sm, n_v, m_sm = np.meshgrid(
+        np.array(n_sm_range, np.float64),
+        np.array(n_v_range, np.float64),
+        np.array(m_sm_range, np.float64),
+        indexing="ij",
+    )
+    n_sm, n_v, m_sm = n_sm.ravel(), n_v.ravel(), m_sm.ravel()
+    area = area_model.area(n_sm, n_v, m_sm, r_vu=2.0, l1_smpair=0.0, l2_kb=0.0)
+    keep = (area <= max_area) & (area >= min_area)
+    return HardwareSpace(n_sm[keep], n_v[keep], m_sm[keep], area[keep])
+
+
+@dataclasses.dataclass
+class CodesignResult:
+    """Per-cell optimal times for every hardware point (eq. 18 inner solves)
+    plus workload-level reductions."""
+
+    workload: Workload
+    gpu: GPUSpec
+    hw: HardwareSpace
+    cell_time: np.ndarray  # (C, H) optimal T_alg per cell per hw point
+    cell_tile_idx: np.ndarray  # (C, H) winning lattice index (-1 infeasible)
+    lattices: List[TileLattice]  # per cell
+
+    # ---- reductions -------------------------------------------------------
+    def weighted_time(self, freqs: Optional[np.ndarray] = None) -> np.ndarray:
+        """Eq. (17) objective per hardware point; default = workload freqs.
+        Passing new ``freqs`` is the §V.B sensitivity-for-free path."""
+        if freqs is None:
+            freqs = np.array([c.freq for c in self.workload.cells])
+        freqs = np.asarray(freqs, np.float64)
+        return freqs @ self.cell_time
+
+    def gflops(self, freqs: Optional[np.ndarray] = None) -> np.ndarray:
+        """Workload performance: weighted useful flops / weighted time."""
+        if freqs is None:
+            freqs = np.array([c.freq for c in self.workload.cells])
+        freqs = np.asarray(freqs, np.float64)
+        flops = np.array(
+            [c.stencil.flops_per_point * c.size.points for c in self.workload.cells]
+        )
+        return (freqs @ flops) / self.weighted_time(freqs) / 1.0e9
+
+    def pareto(self, freqs: Optional[np.ndarray] = None) -> np.ndarray:
+        """Pareto mask over (area, GFLOP/s)."""
+        return pareto_mask(self.hw.area, self.gflops(freqs))
+
+    def best(self, max_area: float = np.inf, freqs=None) -> Tuple[int, float]:
+        """(index, GFLOP/s) of the best design within an area cap."""
+        g = self.gflops(freqs)
+        g = np.where(self.hw.area <= max_area, g, -np.inf)
+        i = int(np.argmax(g))
+        return i, float(g[i])
+
+    def tiles_for(self, cell_index: int, hw_index: int) -> Dict[str, int]:
+        idx = int(self.cell_tile_idx[cell_index, hw_index])
+        if idx < 0:
+            raise ValueError("infeasible cell/hw combination")
+        return decode_index(self.lattices[cell_index], idx)
+
+
+def codesign(
+    workload: Workload,
+    gpu: GPUSpec = MAXWELL_GPU,
+    area_model: LinearAreaModel = MAXWELL,
+    max_area: float = 650.0,
+    hw: Optional[HardwareSpace] = None,
+    lattice_2d: TileLattice = LATTICE_2D,
+    lattice_3d: TileLattice = LATTICE_3D,
+    chunk: int = 512,
+) -> CodesignResult:
+    """Solve eq. (18): for every feasible hardware point, the optimal tile
+    sizes (and time) of every workload cell."""
+    if hw is None:
+        hw = enumerate_hw_space(area_model, max_area=max_area)
+    C, H = len(workload.cells), len(hw)
+    cell_time = np.empty((C, H))
+    cell_idx = np.empty((C, H), dtype=np.int64)
+    lattices: List[TileLattice] = []
+    for ci, cell in enumerate(workload.cells):
+        lat = lattice_3d if cell.stencil.dims == 3 else lattice_2d
+        lattices.append(lat)
+        t, i = solve_cell(
+            cell.stencil, gpu, cell.size, hw.n_sm, hw.n_v, hw.m_sm, lat, chunk
+        )
+        cell_time[ci] = t
+        cell_idx[ci] = i
+    return CodesignResult(workload, gpu, hw, cell_time, cell_idx, lattices)
+
+
+def evaluate_fixed_hw(
+    workload: Workload,
+    point: HardwarePoint,
+    gpu: GPUSpec = MAXWELL_GPU,
+    lattice_2d: TileLattice = LATTICE_2D,
+    lattice_3d: TileLattice = LATTICE_3D,
+) -> Tuple[float, float]:
+    """(weighted time, GFLOP/s) of a *fixed* hardware point (e.g. the stock
+    GTX-980 / Titan X baselines in Fig. 3) with per-cell optimal tiles --
+    i.e. the paper's eq. (2) tile-size-selection problem."""
+    hw = HardwareSpace(
+        n_sm=np.array([point.n_sm], np.float64),
+        n_v=np.array([point.n_v], np.float64),
+        m_sm=np.array([point.m_sm], np.float64),
+        area=np.array([MAXWELL.area_point(point)]),
+    )
+    res = codesign(workload, gpu=gpu, hw=hw, lattice_2d=lattice_2d, lattice_3d=lattice_3d)
+    return float(res.weighted_time()[0]), float(res.gflops()[0])
+
+
+#: Stock baseline points, re-exported for benchmarks.
+STOCK = {"gtx980": GTX980, "titanx": TITAN_X}

@@ -1,0 +1,86 @@
+"""Workload characterization (paper §II, §IV.A).
+
+A workload is a set of (stencil, problem-size) cells with occurrence
+frequencies. The paper's experiments use the six-stencil suite over
+
+    SZ_S = {4096, 8192, 12288, 16384},  SZ_T = {1024, ..., 16384},
+    SZ   = {(S, T) | S in SZ_S, T in SZ_T, T <= S}      (|SZ| = 16)
+
+with uniform frequencies ("we assumed all six stencils equally likely, and
+that each size combination also equally likely", §IV.B).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Sequence, Tuple
+
+from .timemodel import STENCILS, ProblemSize, StencilSpec
+
+__all__ = [
+    "WorkloadCell",
+    "Workload",
+    "paper_sizes",
+    "paper_workload",
+]
+
+SZ_S = (4096, 8192, 12288, 16384)
+SZ_T = (1024, 2048, 4096, 8192, 16384)
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkloadCell:
+    stencil: StencilSpec
+    size: ProblemSize
+    freq: float  # fr(c) * fr(c, Sz), already combined
+
+
+@dataclasses.dataclass(frozen=True)
+class Workload:
+    """A frequency-weighted set of cells; eq. (17)'s objective is
+    ``sum_cell freq * min_tiles T_alg(cell)`` (separability, eq. (18))."""
+
+    name: str
+    cells: Tuple[WorkloadCell, ...]
+
+    def __post_init__(self):
+        total = sum(c.freq for c in self.cells)
+        if not 0.999 <= total <= 1.001:
+            raise ValueError(f"cell frequencies sum to {total}, expected 1")
+
+    @property
+    def stencils(self) -> List[StencilSpec]:
+        seen: Dict[str, StencilSpec] = {}
+        for c in self.cells:
+            seen.setdefault(c.stencil.name, c.stencil)
+        return list(seen.values())
+
+
+def paper_sizes(dims: int) -> List[ProblemSize]:
+    """The 16-element SZ grid; for 3D stencils the three spatial extents are
+    all S (the paper reuses the same SZ set for both classes)."""
+    sizes = []
+    for s in SZ_S:
+        for t in SZ_T:
+            if t <= s:
+                sizes.append(
+                    ProblemSize(s1=s, s2=s, t=t, s3=s if dims == 3 else 1)
+                )
+    assert len(sizes) == 16
+    return sizes
+
+
+def paper_workload(
+    stencil_names: Sequence[str] | None = None, name: str = "paper-uniform"
+) -> Workload:
+    """Uniform-frequency workload over the chosen stencils (default: all six,
+    as in Fig. 3 / §IV.B). Single-stencil workloads (Table II) are built by
+    passing one name -- the §V.B 'workload sensitivity for free' trick."""
+    names = list(stencil_names or STENCILS.keys())
+    cells: List[WorkloadCell] = []
+    for n in names:
+        st = STENCILS[n]
+        sizes = paper_sizes(st.dims)
+        for sz in sizes:
+            cells.append(WorkloadCell(st, sz, 1.0 / (len(names) * len(sizes))))
+    return Workload(name=name, cells=tuple(cells))

@@ -1,0 +1,3 @@
+"""Data substrate: deterministic synthetic token pipeline, host-sharded."""
+
+from .pipeline import DataConfig, SyntheticPipeline, make_batch  # noqa: F401

@@ -1,0 +1,92 @@
+"""Pure-jnp oracles for the stencil kernels.
+
+Written independently of the Pallas kernel bodies (interior slicing on the
+full array, Dirichlet borders via ``.at[...]``) so the allclose tests are a
+genuine cross-check, not a tautology. Like the kernels, arithmetic is done
+in f32 (bf16 inputs are upcast) and the result stored in the input dtype.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["REF_STEPS", "run_ref"]
+
+
+def jacobi2d(x0: jax.Array) -> jax.Array:
+    x = x0.astype(jnp.float32)
+    i = x[1:-1, 1:-1]
+    new = 0.2 * (i + x[:-2, 1:-1] + x[2:, 1:-1] + x[1:-1, :-2] + x[1:-1, 2:])
+    return x.at[1:-1, 1:-1].set(new).astype(x0.dtype)
+
+
+def heat2d(x0: jax.Array) -> jax.Array:
+    x = x0.astype(jnp.float32)
+    i = x[1:-1, 1:-1]
+    lap = x[:-2, 1:-1] + x[2:, 1:-1] + x[1:-1, :-2] + x[1:-1, 2:] - 4.0 * i
+    return x.at[1:-1, 1:-1].set(i + 0.125 * lap).astype(x0.dtype)
+
+
+def laplacian2d(x0: jax.Array) -> jax.Array:
+    x = x0.astype(jnp.float32)
+    i = x[1:-1, 1:-1]
+    new = x[:-2, 1:-1] + x[2:, 1:-1] + x[1:-1, :-2] + x[1:-1, 2:] - 4.0 * i
+    return x.at[1:-1, 1:-1].set(new).astype(x0.dtype)
+
+
+def gradient2d(x0: jax.Array) -> jax.Array:
+    x = x0.astype(jnp.float32)
+    gx = 0.5 * (x[1:-1, 2:] - x[1:-1, :-2])
+    gy = 0.5 * (x[2:, 1:-1] - x[:-2, 1:-1])
+    new = jnp.sqrt(gx * gx + gy * gy)
+    return x.at[1:-1, 1:-1].set(new).astype(x0.dtype)
+
+
+def heat3d(x0: jax.Array) -> jax.Array:
+    x = x0.astype(jnp.float32)
+    i = x[1:-1, 1:-1, 1:-1]
+    lap = (
+        x[:-2, 1:-1, 1:-1]
+        + x[2:, 1:-1, 1:-1]
+        + x[1:-1, :-2, 1:-1]
+        + x[1:-1, 2:, 1:-1]
+        + x[1:-1, 1:-1, :-2]
+        + x[1:-1, 1:-1, 2:]
+        - 6.0 * i
+    )
+    return x.at[1:-1, 1:-1, 1:-1].set(i + 0.125 * lap).astype(x0.dtype)
+
+
+def laplacian3d(x0: jax.Array) -> jax.Array:
+    x = x0.astype(jnp.float32)
+    i = x[1:-1, 1:-1, 1:-1]
+    new = (
+        x[:-2, 1:-1, 1:-1]
+        + x[2:, 1:-1, 1:-1]
+        + x[1:-1, :-2, 1:-1]
+        + x[1:-1, 2:, 1:-1]
+        + x[1:-1, 1:-1, :-2]
+        + x[1:-1, 1:-1, 2:]
+        - 6.0 * i
+    )
+    return x.at[1:-1, 1:-1, 1:-1].set(new).astype(x0.dtype)
+
+
+REF_STEPS: Dict[str, Callable] = {
+    "jacobi2d": jacobi2d,
+    "heat2d": heat2d,
+    "laplacian2d": laplacian2d,
+    "gradient2d": gradient2d,
+    "heat3d": heat3d,
+    "laplacian3d": laplacian3d,
+}
+
+
+def run_ref(name: str, x: jax.Array, steps: int = 1) -> jax.Array:
+    f = REF_STEPS[name]
+    for _ in range(steps):
+        x = f(x)
+    return x

@@ -1,0 +1,312 @@
+"""Scan-aware accounting over optimized HLO text.
+
+Why this exists: ``compiled.cost_analysis()`` (HloCostAnalysis) visits a
+``while`` body ONCE -- but our stacks are ``lax.scan``s over layers, so both
+FLOPs and collective bytes would be undercounted by the layer count (32-61x)
+if read naively. This module parses the optimized HLO dump into its
+computation graph, derives each while loop's trip count from its condition
+computation, and accumulates
+
+* dot FLOPs          (2 * prod(result) * contracted extent), and
+* collective operand bytes per op kind,
+
+with every computation expanded through ``calls=``/``to_apply=``/
+``condition=``/``body=`` edges and while bodies multiplied by their trip
+count. Fusions are expanded too (CPU emits dot fusions), so nothing is
+double-counted: only leaf ``dot``/collective instructions contribute.
+
+This is text-based on purpose: it needs nothing beyond ``compiled.as_text()``
+and is validated against analytic FLOP counts in tests/test_hloanalysis.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+__all__ = ["analyze_hlo", "HloTotals"]
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COMP_START = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*->.*\{\s*$")
+_INSTR = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.+)$")
+_SHAPE = re.compile(r"\b(f64|f32|f16|bf16|f8e4m3fn|f8e5m2|s64|u64|s32|u32|s16|u16|s8|u8|pred|c64|c128)\[([0-9,]*)\]")
+_OP = re.compile(r"^(?:\([^=]*\)|\S+)\s+([\w\-]+)\(")
+_CALLEE = re.compile(r"(?:calls|to_apply|body|condition|true_computation|false_computation)=%?([\w\.\-]+)")
+_BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
+_CONST_INT = re.compile(r"\bconstant\((\d+)\)")
+_CONTRACT = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all", "collective-permute")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+
+
+def _shapes_in(text: str) -> List[Tuple[str, Tuple[int, ...]]]:
+    out = []
+    for t, dims in _SHAPE.findall(text):
+        shape = tuple(int(d) for d in dims.split(",") if d)
+        out.append((t, shape))
+    return out
+
+
+def _nbytes(shapes) -> float:
+    total = 0.0
+    for t, shape in shapes:
+        n = 1
+        for d in shape:
+            n *= d
+        total += n * _DTYPE_BYTES[t]
+    return total
+
+
+@dataclasses.dataclass
+class _Instr:
+    name: str
+    op: str
+    result_shapes: list
+    line: str
+
+
+@dataclasses.dataclass
+class _Comp:
+    name: str
+    instrs: List[_Instr]
+    symbols: Dict[str, list]  # instr name -> result shapes
+
+
+@dataclasses.dataclass
+class HloTotals:
+    dot_flops: float = 0.0
+    collective_bytes: float = 0.0
+    materialized_bytes: float = 0.0  # fusion-boundary HBM-traffic proxy
+    per_collective: Dict[str, Dict[str, float]] = dataclasses.field(default_factory=dict)
+    while_trips: List[int] = dataclasses.field(default_factory=list)
+
+    def add(self, other: "HloTotals", mult: float = 1.0) -> None:
+        self.dot_flops += other.dot_flops * mult
+        self.collective_bytes += other.collective_bytes * mult
+        self.materialized_bytes += other.materialized_bytes * mult
+        for k, v in other.per_collective.items():
+            rec = self.per_collective.setdefault(k, {"count": 0.0, "bytes": 0.0})
+            rec["count"] += v["count"] * mult
+            rec["bytes"] += v["bytes"] * mult
+
+
+#: ops that do not materialize a new buffer (aliases/metadata/control).
+#: while/conditional results alias their carries (the interior ops are
+#: counted when the body computations are walked).
+_NO_MATERIALIZE = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota", "while",
+    "conditional",
+}
+
+
+def _parse_computations(text: str) -> Tuple[Dict[str, _Comp], Optional[str]]:
+    comps: Dict[str, _Comp] = {}
+    entry: Optional[str] = None
+    cur: Optional[_Comp] = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if cur is None:
+            m = _COMP_START.match(line.strip())
+            if m:
+                cur = _Comp(m.group(1), [], {})
+                if line.strip().startswith("ENTRY"):
+                    entry = cur.name
+            continue
+        if line.strip() == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _INSTR.match(line)
+        if not m:
+            continue
+        name, rhs = m.group(1), m.group(2)
+        # strip /*index=N*/ comments: they contain '=' and break op matching
+        rhs = re.sub(r"/\*.*?\*/", " ", rhs)
+        line = re.sub(r"/\*.*?\*/", " ", line)
+        op_m = _OP.match(rhs)
+        op = op_m.group(1) if op_m else rhs.split()[0]
+        # result shapes: the segment before the op token
+        cut = rhs.find(op + "(") if op_m else len(rhs)
+        result_shapes = _shapes_in(rhs[: cut if cut > 0 else len(rhs)])
+        instr = _Instr(name, op, result_shapes, line)
+        cur.instrs.append(instr)
+        cur.symbols[name] = result_shapes
+    return comps, entry
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_BRACE_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 1
+
+
+def _operand_names(line: str, op: str) -> List[str]:
+    i = line.find(op + "(")
+    if i < 0:
+        return []
+    args = line[i + len(op) + 1 :]
+    depth, end = 1, len(args)
+    for j, ch in enumerate(args):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                end = j
+                break
+    return re.findall(r"%([\w\.\-]+)", args[:end])
+
+
+def _dot_flops(instr: _Instr, comp: _Comp) -> float:
+    """2 * prod(result) * contracted extent (from lhs shape + dims)."""
+    result_elems = 1.0
+    for _, shape in instr.result_shapes[:1]:
+        for d in shape:
+            result_elems *= d
+    m = _CONTRACT.search(instr.line)
+    contracted = 1.0
+    if m:
+        dims = [int(d) for d in m.group(1).split(",") if d]
+        ops = _operand_names(instr.line, "dot")
+        if ops:
+            lhs_shapes = comp.symbols.get(ops[0]) or []
+            if lhs_shapes:
+                _, lhs = lhs_shapes[0]
+                for d in dims:
+                    if d < len(lhs):
+                        contracted *= lhs[d]
+    return 2.0 * result_elems * contracted
+
+
+def _trip_count(cond: _Comp) -> int:
+    """Max integer constant in the loop condition (jax scans: compare-LT)."""
+    best = 1
+    for instr in cond.instrs:
+        for m in _CONST_INT.finditer(instr.line):
+            best = max(best, int(m.group(1)))
+    return best
+
+
+def _inline_computations(comps: Dict[str, _Comp]) -> set:
+    """Computations reached via calls=/to_apply= (fusion bodies, reduce
+    combiners, ...): their instructions live in registers/VMEM, not HBM.
+    While bodies and conditional branches are NOT inline -- their values
+    materialize every iteration."""
+    inline = set()
+    for comp in comps.values():
+        for instr in comp.instrs:
+            if instr.op in ("while", "conditional"):
+                continue
+            for callee in _CALLEE.finditer(instr.line):
+                kind, cname = callee.group(0).split("=")[0], callee.group(1)
+                if kind in ("calls", "to_apply"):
+                    inline.add(cname)
+    # transitively: anything called from an inline computation is inline
+    changed = True
+    while changed:
+        changed = False
+        for name in list(inline):
+            comp = comps.get(name)
+            if not comp:
+                continue
+            for instr in comp.instrs:
+                for callee in _CALLEE.finditer(instr.line):
+                    cname = callee.group(1)
+                    if cname not in inline:
+                        inline.add(cname)
+                        changed = True
+    return inline
+
+
+def _totals(
+    comp_name: str, comps: Dict[str, _Comp], memo: Dict[str, HloTotals],
+    inline: Optional[set] = None,
+) -> HloTotals:
+    if comp_name in memo:
+        return memo[comp_name]
+    memo[comp_name] = HloTotals()  # cycle guard
+    comp = comps.get(comp_name)
+    if comp is None:
+        return memo[comp_name]
+    if inline is None:
+        inline = set()
+    is_fusion_boundary = comp_name not in inline
+    tot = HloTotals()
+    for instr in comp.instrs:
+        base_op = instr.op.replace("-start", "")
+        if is_fusion_boundary and instr.op not in _NO_MATERIALIZE:
+            # each materialized tensor is written once and read ~once.
+            # dynamic-update-slice (and fusions rooted in one -- XLA names
+            # them so) updates in place: count the smallest operand (the
+            # update slice), not the full buffer, or grad-stack writes in
+            # layer scans would be overcounted by the layer count.
+            nbytes = _nbytes(instr.result_shapes)
+            if "dynamic-update-slice" in instr.op or "dynamic-update-slice" in instr.name:
+                op_sizes = [
+                    _nbytes(comp.symbols[o])
+                    for o in _operand_names(instr.line, instr.op)
+                    if o in comp.symbols and comp.symbols[o]
+                ]
+                if op_sizes:
+                    nbytes = min(op_sizes)
+            tot.materialized_bytes += 2.0 * nbytes
+        if base_op in _COLLECTIVES:
+            nbytes = _nbytes(instr.result_shapes)
+            g = _group_size(instr.line)
+            if base_op == "all-gather":
+                nbytes /= max(g, 1)
+            elif base_op == "reduce-scatter":
+                nbytes *= max(g, 1)
+            rec = tot.per_collective.setdefault(base_op, {"count": 0.0, "bytes": 0.0})
+            rec["count"] += 1
+            rec["bytes"] += nbytes
+            tot.collective_bytes += nbytes
+        elif instr.op == "dot":
+            tot.dot_flops += _dot_flops(instr, comp)
+        if instr.op == "while":
+            body = cond = None
+            for callee in _CALLEE.finditer(instr.line):
+                kind = callee.group(0).split("=")[0]
+                if kind == "body":
+                    body = callee.group(1)
+                elif kind == "condition":
+                    cond = callee.group(1)
+            trips = _trip_count(comps[cond]) if cond in comps else 1
+            tot.while_trips.append(trips)
+            if body:
+                tot.add(_totals(body, comps, memo, inline), mult=trips)
+        else:
+            seen = set()
+            for callee in _CALLEE.finditer(instr.line):
+                kind, cname = callee.group(0).split("=")[0], callee.group(1)
+                if kind in ("body", "condition") or cname in seen:
+                    continue
+                seen.add(cname)
+                tot.add(_totals(cname, comps, memo, inline))
+            b = _BRANCHES.search(instr.line)
+            if b:
+                for cname in re.findall(r"%?([\w\.\-]+)", b.group(1)):
+                    tot.add(_totals(cname, comps, memo, inline))
+    memo[comp_name] = tot
+    return tot
+
+
+def analyze_hlo(text: str) -> HloTotals:
+    """Loop-expanded totals for the entry computation."""
+    comps, entry = _parse_computations(text)
+    if entry is None:
+        return HloTotals()
+    inline = _inline_computations(comps)
+    return _totals(entry, comps, {}, inline)

@@ -1,0 +1,48 @@
+"""Production meshes.
+
+Single pod  : (16, 16)    -> axes ("data", "model")          = 256 chips
+Multi-pod   : (2, 16, 16) -> axes ("pod", "data", "model")   = 512 chips
+
+``make_production_mesh`` is a FUNCTION (not module state) so importing this
+module never touches jax device state; the dry-run entrypoint sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import, everything else sees the host's real device count.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import numpy as np
+
+__all__ = ["make_production_mesh", "make_mesh", "SINGLE_POD", "MULTI_POD"]
+
+SINGLE_POD: Tuple[int, ...] = (16, 16)
+MULTI_POD: Tuple[int, ...] = (2, 16, 16)
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """The assignment's production mesh over (a prefix of) jax.devices()."""
+    shape = MULTI_POD if multi_pod else SINGLE_POD
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return make_mesh(shape, axes)
+
+
+def make_mesh(shape: Sequence[int], axes: Sequence[str]):
+    """Build a Mesh of the requested shape from the first prod(shape)
+    devices (jax.make_mesh when counts line up, manual reshape otherwise --
+    the dry-run runs with 512 fake devices and also builds 256-chip
+    single-pod meshes)."""
+    import jax
+    from jax.sharding import Mesh
+
+    need = int(np.prod(shape))
+    devs = jax.devices()
+    if len(devs) < need:
+        raise RuntimeError(
+            f"mesh {tuple(shape)} needs {need} devices, have {len(devs)} "
+            "(dry-run sets XLA_FLAGS=--xla_force_host_platform_device_count=512)"
+        )
+    if len(devs) == need:
+        return jax.make_mesh(tuple(shape), tuple(axes))
+    return Mesh(np.array(devs[:need]).reshape(tuple(shape)), tuple(axes))

@@ -1,0 +1,77 @@
+"""Training launcher: ``python -m repro.launch.train --arch llama3-8b ...``
+
+Runs the fault-tolerant Trainer on the requested mesh. On this CPU
+container you will want --mesh 1x1 and a reduced config (--reduced); on a
+real fleet the same flags select the production meshes.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.configs import SHAPES
+from repro.configs.base import get_arch
+from repro.data.pipeline import DataConfig
+from repro.optim.adamw import AdamWConfig
+from repro.train import TrainConfig, Trainer, TrainerConfig
+
+
+def parse_mesh(spec: str) -> Mesh:
+    dims = tuple(int(x) for x in spec.split("x"))
+    axes = {1: ("model",), 2: ("data", "model"), 3: ("pod", "data", "model")}[len(dims)]
+    n = int(np.prod(dims))
+    return Mesh(np.array(jax.devices()[:n]).reshape(dims), axes)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k", choices=list(SHAPES))
+    ap.add_argument("--mesh", default="1x1", help="e.g. 16x16 or 2x16x16")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=0, help="override global batch")
+    ap.add_argument("--seq", type=int, default=0, help="override seq len")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--remat", default="none")
+    ap.add_argument("--fsdp", action="store_true")
+    ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    shape = SHAPES[args.shape]
+    mesh = parse_mesh(args.mesh)
+    tcfg = TrainConfig(
+        microbatches=args.microbatches,
+        remat=args.remat,
+        fsdp=args.fsdp,
+        compress_grads=args.compress_grads,
+        opt=AdamWConfig(lr=args.lr, warmup_steps=max(2, args.steps // 20),
+                        total_steps=args.steps),
+    )
+    run = TrainerConfig(
+        steps=args.steps, ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
+        batch_override=args.batch or None, seq_override=args.seq or None,
+    )
+    trainer = Trainer(cfg, shape, mesh, tcfg, run, DataConfig(seed=args.seed))
+    out = trainer.train()
+    last = out["metrics"][-1] if out["metrics"] else {}
+    print(
+        f"finished step={out['step']} failures={out['failures']} "
+        f"stragglers={len(out['stragglers'])} "
+        f"loss={last.get('lm_loss', float('nan')):.4f}"
+    )
+
+
+if __name__ == "__main__":
+    main()

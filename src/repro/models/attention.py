@@ -1,0 +1,380 @@
+"""Attention variants: GQA/MHA, sliding-window (SWA), MLA (DeepSeek), and
+cross-attention -- with a unified KV-cache contract for serving.
+
+Cache contract (built by ``repro.serve.kvcache``):
+* GQA/SWA/cross: ``{"k": (B, L, KH, Dk), "v": (B, L, KH, Dv), "idx": ()}``
+  -- ``idx`` is the number of tokens already written; keys are stored
+  *post-RoPE*. SWA caches are ring buffers of length ``window``.
+* MLA: ``{"ckv": (B, L, r_kv), "krope": (B, L, Dr), "idx": ()}`` -- the
+  compressed latent is cached (MLA's raison d'etre) and decode uses the
+  absorbed-matmul path, so per-token memory is O(r_kv + Dr), not O(H*Dh).
+
+Long sequences (prefill_32k and up) use a chunked online-softmax
+implementation (lax.scan over KV blocks inside lax.map over Q blocks) so
+activation memory is O(S * block), not O(S^2).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import ArchConfig
+from .layers import apply_rope, dense_init, mrope_rotate, rmsnorm, rmsnorm_init
+
+__all__ = ["attn_init", "attention", "NEG_INF"]
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+# Sequences at or above this length take the chunked path under impl="auto".
+CHUNKED_THRESHOLD = 8192
+Q_CHUNK = 1024
+K_CHUNK = 1024
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+def attn_init(key, cfg: ArchConfig, dtype, cross: bool = False) -> Dict:
+    d, h, kh, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    a = cfg.attn
+    if a.kind == "mla" and not cross:
+        r_q, r_kv, dr, dv = a.q_lora_rank, a.kv_lora_rank, a.rope_head_dim, a.v_head_dim
+        k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+        return {
+            "wq_a": dense_init(k1, (d, r_q), dtype),
+            "q_norm": rmsnorm_init(r_q, dtype),
+            "wq_b": dense_init(k2, (r_q, h * (dh + dr)), dtype),
+            "wkv_a": dense_init(k3, (d, r_kv + dr), dtype),
+            "kv_norm": rmsnorm_init(r_kv, dtype),
+            "wkv_b": dense_init(k4, (r_kv, h * (dh + dv)), dtype),
+            "wo": dense_init(k5, (h * dv, d), dtype),
+        }
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(k1, (d, h * dh), dtype),
+        "wk": dense_init(k2, (d, kh * dh), dtype),
+        "wv": dense_init(k3, (d, kh * dh), dtype),
+        "wo": dense_init(k4, (h * dh, d), dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Masked softmax-attention over explicit K/V (grouped heads)
+# ---------------------------------------------------------------------------
+def _mask_bias(q_pos, k_pos, mode: str, window: int):
+    """(B, Sq, Lk) additive f32 bias. k_pos < 0 marks invalid cache slots."""
+    q = q_pos[:, :, None].astype(jnp.int32)
+    k = k_pos[:, None, :].astype(jnp.int32)
+    ok = k >= 0
+    if mode == "causal":
+        ok &= k <= q
+        if window:
+            ok &= (q - k) < window
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def _constrain_batch_heads(x):
+    """Best-effort wsc pinning (batch -> data, kv-heads -> model) on the
+    attention score/prob tensors (B, KH, G, Sq, L). Without it, GSPMD's
+    propagation can resolve the softmax+bias chain by replicating the whole
+    quadratic attention path across the data axis (measured 4x FLOP
+    inflation on deepseek MLA -- EXPERIMENTS.md §Perf). No-op outside a
+    mesh context or when dims do not divide."""
+    for spec in (
+        P(("pod", "data"), "model", None, None, None),
+        P("data", "model", None, None, None),
+        P("data", None, None, None, None),
+    ):
+        try:
+            return jax.lax.with_sharding_constraint(x, spec)
+        except Exception:  # noqa: BLE001 -- axis absent / indivisible
+            continue
+    return x
+
+
+def _sdpa(q, k, v, bias, scale):
+    """q: (B,Sq,H,Dk) k: (B,Lk,KH,Dk) v: (B,Lk,KH,Dv) bias: (B,Sq,Lk)."""
+    b, sq, h, dk = q.shape
+    kh = k.shape[2]
+    g = h // kh
+    qg = q.reshape(b, sq, kh, g, dk)
+    scores = jnp.einsum("bqkgd,blkd->bkgql", qg, k).astype(jnp.float32) * scale
+    scores = scores + bias[:, None, None, :, :]
+    scores = _constrain_batch_heads(scores)
+    w = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgql,blke->bqkge", w, v)
+    return out.reshape(b, sq, h, v.shape[-1])
+
+
+def _sdpa_chunked(q, k, v, q_pos, k_pos, mode, window, scale):
+    """Online-softmax attention; O(S*block) activation memory."""
+    b, sq, h, dk = q.shape
+    lk = k.shape[1]
+    kh = k.shape[2]
+    g = h // kh
+    dv = v.shape[-1]
+    q_chunks = max(1, sq // Q_CHUNK) if sq % Q_CHUNK == 0 else -(-sq // Q_CHUNK)
+    k_chunks = max(1, lk // K_CHUNK) if lk % K_CHUNK == 0 else -(-lk // K_CHUNK)
+    # pad to chunk multiples
+    sq_p, lk_p = q_chunks * Q_CHUNK, k_chunks * K_CHUNK
+    qp = jnp.pad(q, ((0, 0), (0, sq_p - sq), (0, 0), (0, 0)))
+    qpos = jnp.pad(q_pos, ((0, 0), (0, sq_p - sq)), constant_values=0)
+    kp = jnp.pad(k, ((0, 0), (0, lk_p - lk), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, lk_p - lk), (0, 0), (0, 0)))
+    kpos = jnp.pad(k_pos, ((0, 0), (0, lk_p - lk)), constant_values=-1)
+
+    qp = qp.reshape(b, q_chunks, Q_CHUNK, kh, g, dk)
+    kp = kp.reshape(b, k_chunks, K_CHUNK, kh, dk)
+    vp = vp.reshape(b, k_chunks, K_CHUNK, kh, dv)
+    qpos_c = qpos.reshape(b, q_chunks, Q_CHUNK)
+    kpos_c = kpos.reshape(b, k_chunks, K_CHUNK)
+
+    def q_block(args):
+        qc, qpc = args  # (B, Qc, KH, G, Dk), (B, Qc)
+
+        def kv_step(carry, inp):
+            m, l, acc = carry
+            kc, vc, kpc = inp  # (B, Kc, KH, Dk), (B, Kc, KH, Dv), (B, Kc)
+            s = jnp.einsum("bqkgd,blkd->bkgql", qc, kc).astype(jnp.float32) * scale
+            bias = _mask_bias(qpc, kpc, mode, window)
+            s = s + bias[:, None, None, :, :]
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bkgql,blke->bkgqe", p.astype(vc.dtype), vc
+            ).astype(jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, kh, g, Q_CHUNK), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, kh, g, Q_CHUNK), jnp.float32)
+        a0 = jnp.zeros((b, kh, g, Q_CHUNK, dv), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step,
+            (m0, l0, a0),
+            (
+                jnp.moveaxis(kp, 1, 0),
+                jnp.moveaxis(vp, 1, 0),
+                jnp.moveaxis(kpos_c, 1, 0),
+            ),
+        )
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return jnp.moveaxis(out, 3, 1)  # (B, Qc, KH, G, Dv)
+
+    outs = jax.lax.map(q_block, (jnp.moveaxis(qp, 1, 0), jnp.moveaxis(qpos_c, 1, 0)))
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, sq_p, h, dv)[:, :sq]
+    return out.astype(v.dtype)
+
+
+def _attend(q, k, v, q_pos, k_pos, mode, window, impl):
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    long_seq = max(q.shape[1], k.shape[1]) >= CHUNKED_THRESHOLD
+    if impl == "chunked" or (impl == "auto" and long_seq and q.shape[1] > 1):
+        return _sdpa_chunked(q, k, v, q_pos, k_pos, mode, window, scale)
+    bias = _mask_bias(q_pos, k_pos, mode, window)
+    return _sdpa(q, k, v, bias, scale)
+
+
+# ---------------------------------------------------------------------------
+# Cache write helpers
+# ---------------------------------------------------------------------------
+def _write_cache(cache: Dict, updates: Dict, positions, ring: int = 0) -> Dict:
+    """Write S new entries into the cache at ``idx`` (ring-buffered if SWA).
+
+    ``positions`` are the absolute token positions (B, S) of the updates;
+    slot bookkeeping uses idx (same for all batch rows).
+    """
+    idx = cache["idx"]
+    s = positions.shape[1]
+    new = dict(cache)
+    for name, val in updates.items():
+        buf = cache[name]
+        cap = buf.shape[1]
+        if ring and s >= cap:
+            # keep only the last `cap` entries, ring-placed
+            tail = val[:, -cap:]
+            tail_pos = (idx + jnp.arange(s - cap, s)) % cap
+            new[name] = buf.at[:, tail_pos].set(tail.astype(buf.dtype))
+        elif ring:
+            slots = (idx + jnp.arange(s)) % cap
+            new[name] = buf.at[:, slots].set(val.astype(buf.dtype))
+        else:
+            new[name] = jax.lax.dynamic_update_slice_in_dim(
+                buf, val.astype(buf.dtype), idx, axis=1
+            )
+    new["idx"] = idx + s
+    return new
+
+
+def _cache_positions(cache: Dict, ring: int = 0) -> jnp.ndarray:
+    """Absolute position per cache slot, -1 for unwritten slots. (B, L)."""
+    idx = cache["idx"]
+    first = next(k for k in cache if k != "idx")
+    b, cap = cache[first].shape[:2]
+    slots = jnp.arange(cap)
+    if ring:
+        # slot s holds position p where p % cap == s, for the last `cap` p's
+        newest = idx - 1
+        pos = newest - ((newest - slots) % cap)
+        pos = jnp.where((pos >= 0) & (pos < idx), pos, -1)
+    else:
+        pos = jnp.where(slots < idx, slots, -1)
+    return jnp.broadcast_to(pos[None, :], (b, cap))
+
+
+# ---------------------------------------------------------------------------
+# Public entry
+# ---------------------------------------------------------------------------
+def attention(
+    params: Dict,
+    cfg: ArchConfig,
+    x: jnp.ndarray,
+    *,
+    positions: jnp.ndarray,
+    mode: str = "causal",  # causal | bidir | cross
+    cache: Optional[Dict] = None,
+    kv_source: Optional[jnp.ndarray] = None,  # encoder states for cross-attn
+    impl: str = "auto",
+) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    """Returns (output (B,S,d), updated cache or None).
+
+    * training/encoder: ``cache=None`` -- K/V computed inline.
+    * prefill: pass a fresh cache; S tokens are written, attention runs
+      against the inline K/V (cheaper than reading back).
+    * decode: pass the live cache; S == 1 (or a small chunk) is appended and
+      attention runs against the cache contents.
+    """
+    a = cfg.attn
+    if a.kind == "mla" and mode != "cross":
+        return _mla_attention(params, cfg, x, positions, cache, impl)
+
+    h, kh, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    b, s, _ = x.shape
+    ring = a.window if a.kind == "swa" else 0
+    is_mrope = cfg.rope == "mrope"
+    pos_ids = positions[:, 0] if is_mrope else positions  # (B,S) temporal ids
+
+    q = jnp.einsum("bsd,de->bse", x, params["wq"]).reshape(b, s, h, dh)
+
+    if mode == "cross":
+        if cache is not None and kv_source is None:
+            k, v = cache["k"], cache["v"]  # precomputed at prefill
+            k_pos = _cache_positions(cache)
+            out = _attend(q, k, v, pos_ids, k_pos, "bidir", 0, impl)
+            return _po(params, out, b, s), cache
+        assert kv_source is not None
+        lk = kv_source.shape[1]
+        k = jnp.einsum("bld,de->ble", kv_source, params["wk"]).reshape(b, lk, kh, dh)
+        v = jnp.einsum("bld,de->ble", kv_source, params["wv"]).reshape(b, lk, kh, dh)
+        k_pos = jnp.broadcast_to(jnp.arange(lk)[None], (b, lk))
+        out = _attend(q, k, v, pos_ids, k_pos, "bidir", 0, impl)
+        if cache is not None:
+            cache = _write_cache(cache, {"k": k, "v": v}, k_pos)
+        return _po(params, out, b, s), cache
+
+    k = jnp.einsum("bsd,de->bse", x, params["wk"]).reshape(b, s, kh, dh)
+    v = jnp.einsum("bsd,de->bse", x, params["wv"]).reshape(b, s, kh, dh)
+    if cfg.rope in ("standard",):
+        q = apply_rope(q, pos_ids, cfg.rope_theta)
+        k = apply_rope(k, pos_ids, cfg.rope_theta)
+    elif is_mrope:
+        q = mrope_rotate(q, positions, cfg.mrope_sections, cfg.rope_theta)
+        k = mrope_rotate(k, positions, cfg.mrope_sections, cfg.rope_theta)
+    # learned/sinusoidal positions are added at the embedding level
+
+    window = a.window if a.kind == "swa" else 0
+    if cache is None:
+        out = _attend(q, k, v, pos_ids, pos_ids, mode, window, impl)
+        return _po(params, out, b, s), None
+
+    prefill = s > 1
+    cache = _write_cache(cache, {"k": k, "v": v}, pos_ids, ring=ring)
+    if prefill:
+        # inline K/V already cover every valid key (ring keeps last window)
+        out = _attend(q, k, v, pos_ids, pos_ids, mode, window, impl)
+    else:
+        k_pos = _cache_positions(cache, ring=ring)
+        out = _attend(q, cache["k"], cache["v"], pos_ids, k_pos, mode, window, impl)
+    return _po(params, out, b, s), cache
+
+
+def _po(params, out, b, s):
+    """Output projection over flattened heads."""
+    return jnp.einsum("bsf,fd->bsd", out.reshape(b, s, -1), params["wo"])
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V3): low-rank latent KV + decoupled RoPE
+# ---------------------------------------------------------------------------
+def _mla_project_q(params, cfg, x, pos_ids):
+    a = cfg.attn
+    b, s, _ = x.shape
+    h, dh, dr = cfg.n_heads, cfg.head_dim_, a.rope_head_dim
+    q_lat = jnp.einsum("bsd,dr->bsr", x, params["wq_a"])
+    q_lat = rmsnorm(params["q_norm"], q_lat)
+    q = jnp.einsum("bsr,re->bse", q_lat, params["wq_b"]).reshape(b, s, h, dh + dr)
+    q_nope, q_rope = q[..., :dh], q[..., dh:]
+    q_rope = apply_rope(q_rope, pos_ids, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _mla_latents(params, cfg, x, pos_ids):
+    a = cfg.attn
+    kv = jnp.einsum("bsd,dr->bsr", x, params["wkv_a"])
+    ckv, k_rope = kv[..., : a.kv_lora_rank], kv[..., a.kv_lora_rank :]
+    ckv = rmsnorm(params["kv_norm"], ckv)
+    k_rope = apply_rope(k_rope[:, :, None, :], pos_ids, cfg.rope_theta)[:, :, 0]
+    return ckv, k_rope  # (B,S,r_kv), (B,S,Dr)
+
+
+def _mla_attention(params, cfg, x, positions, cache, impl):
+    a = cfg.attn
+    b, s, _ = x.shape
+    h, dh, dr, dv = cfg.n_heads, cfg.head_dim_, a.rope_head_dim, a.v_head_dim
+    r_kv = a.kv_lora_rank
+    pos_ids = positions
+    q_nope, q_rope = _mla_project_q(params, cfg, x, pos_ids)
+    ckv, k_rope = _mla_latents(params, cfg, x, pos_ids)
+    scale = 1.0 / math.sqrt(dh + dr)
+
+    wkv_b = params["wkv_b"].reshape(r_kv, h, dh + dv)
+    wk_b, wv_b = wkv_b[..., :dh], wkv_b[..., dh:]
+
+    decode = cache is not None and s == 1
+    if cache is not None:
+        cache = _write_cache(cache, {"ckv": ckv, "krope": k_rope}, pos_ids)
+
+    if not decode:
+        # train/prefill: expand per-position K/V (activation-sized, fine)
+        k_nope = jnp.einsum("blr,rhe->blhe", ckv, wk_b)
+        v = jnp.einsum("blr,rhe->blhe", ckv, wv_b)
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (b, s, h, dr))], axis=-1
+        )
+        q = jnp.concatenate([q_nope, q_rope], axis=-1)
+        out = _attend(q, k, v, pos_ids, pos_ids, "causal", 0, impl)
+    else:
+        # absorbed decode: score/context in latent space, O(L * r_kv)
+        l = cache["ckv"].shape[1]
+        k_pos = _cache_positions(cache)
+        q_lat = jnp.einsum("bshe,rhe->bshr", q_nope, wk_b)  # absorb W^UK
+        s_lat = jnp.einsum("bshr,blr->bhsl", q_lat, cache["ckv"]).astype(jnp.float32)
+        s_rope = jnp.einsum("bshe,ble->bhsl", q_rope, cache["krope"]).astype(
+            jnp.float32
+        )
+        scores = (s_lat + s_rope) * scale
+        bias = _mask_bias(pos_ids, k_pos, "causal", 0)
+        scores = scores + bias[:, None, :, :]
+        w = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+        ctx_lat = jnp.einsum("bhsl,blr->bshr", w, cache["ckv"])
+        out = jnp.einsum("bshr,rhe->bshe", ctx_lat, wv_b)  # expand W^UV
+    return (
+        jnp.einsum("bsf,fd->bsd", out.reshape(b, s, h * dv), params["wo"]),
+        cache,
+    )

@@ -1,0 +1,139 @@
+"""Shared neural-net layers (pure-JAX, parameter pytrees; no flax).
+
+Conventions:
+* parameters are nested dicts of ``jnp.ndarray``; repeated layers are
+  *stacked* along a leading axis and consumed with ``jax.lax.scan`` so the
+  traced HLO contains each distinct layer body exactly once (compile time
+  at 512 devices depends on it);
+* matmuls are ``jnp.einsum`` with stable letter conventions so the sharding
+  rules in ``repro.sharding.partition`` can reason about dimension roles;
+* activations/softmax accumulate in f32, parameters/activations are stored
+  in the config dtype (bf16 for the full-scale configs).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "dense_init",
+    "embed_init",
+    "rmsnorm_init",
+    "rmsnorm",
+    "mlp_init",
+    "mlp",
+    "rope_freqs",
+    "apply_rope",
+    "mrope_rotate",
+    "sinusoidal_positions",
+]
+
+
+def dense_init(key, shape, dtype, scale: float | None = None):
+    """Truncated-normal fan-in init (matmul weights)."""
+    fan_in = shape[0] if len(shape) >= 2 else 1
+    scale = scale if scale is not None else 1.0 / math.sqrt(fan_in)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, vocab, d_model, dtype):
+    return (jax.random.truncated_normal(key, -2.0, 2.0, (vocab, d_model), jnp.float32) * 0.02).astype(
+        dtype
+    )
+
+
+def rmsnorm_init(d_model, dtype, offset: float = 0.0):
+    # stored weight; effective scale is (offset + w) so gemma stores zeros
+    return jnp.ones((d_model,), dtype) if offset == 0.0 else jnp.zeros((d_model,), dtype)
+
+
+def rmsnorm(w, x, offset: float = 0.0, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    rms = jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return ((offset + w.astype(jnp.float32)) * xf * rms).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs: silu-gated (llama), geglu (gemma), squared-relu (nemotron/minitron)
+# ---------------------------------------------------------------------------
+def mlp_init(key, d_model, d_ff, act: str, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {"down": dense_init(k2, (d_ff, d_model), dtype)}
+    if act in ("silu", "geglu"):
+        p["gate"] = dense_init(k1, (d_model, d_ff), dtype)
+        p["up"] = dense_init(k3, (d_model, d_ff), dtype)
+    else:  # relu2: single up-projection
+        p["up"] = dense_init(k1, (d_model, d_ff), dtype)
+    return p
+
+
+def mlp(params, x, act: str):
+    up = jnp.einsum("...d,df->...f", x, params["up"])
+    if act == "silu":
+        gate = jnp.einsum("...d,df->...f", x, params["gate"])
+        h = jax.nn.silu(gate) * up
+    elif act == "geglu":
+        gate = jnp.einsum("...d,df->...f", x, params["gate"])
+        h = jax.nn.gelu(gate, approximate=True) * up
+    elif act == "relu2":
+        h = jnp.square(jax.nn.relu(up))
+    else:
+        raise ValueError(f"unknown act {act}")
+    return jnp.einsum("...f,fd->...d", h, params["down"])
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings (standard + M-RoPE) and absolute positions
+# ---------------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    """Inverse frequencies for the pairwise rotation, shape (head_dim//2,)."""
+    return 1.0 / (
+        theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+    )
+
+
+def _rotate(x, angles):
+    """Rotate pairs. x: (..., S, H, D); angles: (..., S, 1|H, D/2)."""
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1).astype(
+        x.dtype
+    )
+
+
+def apply_rope(x, positions, theta: float):
+    """Standard RoPE. x: (B, S, H, D); positions: (B, S) int."""
+    freqs = rope_freqs(x.shape[-1], theta)  # (D/2,)
+    angles = positions[..., None, None].astype(jnp.float32) * freqs  # (B,S,1,D/2)
+    return _rotate(x, angles)
+
+
+def mrope_rotate(x, positions3, sections: Tuple[int, ...], theta: float):
+    """Qwen2-VL M-RoPE: positions3 (B, 3, S) = (t, h, w) ids; the D/2 rotary
+    pairs are split into ``sections`` (sum = D/2), each driven by one id."""
+    d_half = x.shape[-1] // 2
+    assert sum(sections) == d_half, (sections, d_half)
+    freqs = rope_freqs(x.shape[-1], theta)  # (D/2,)
+    # select which of the 3 position streams drives each pair
+    sel = jnp.repeat(
+        jnp.arange(3), jnp.array(sections), total_repeat_length=d_half
+    )  # (D/2,)
+    pos = jnp.take_along_axis(
+        positions3.astype(jnp.float32),  # (B, 3, S)
+        jnp.broadcast_to(sel[None, :, None], (x.shape[0], d_half, x.shape[1])),
+        axis=1,
+    )  # (B, D/2, S)
+    angles = jnp.moveaxis(pos, 1, -1)[..., None, :] * freqs  # (B,S,1,D/2)
+    return _rotate(x, angles)
+
+
+def sinusoidal_positions(n: int, d_model: int) -> jnp.ndarray:
+    """Whisper-style sinusoidal embedding table (n, d_model), f32."""
+    half = d_model // 2
+    scale = jnp.exp(-jnp.arange(half, dtype=jnp.float32) * math.log(10000.0) / (half - 1))
+    args = jnp.arange(n, dtype=jnp.float32)[:, None] * scale[None, :]
+    return jnp.concatenate([jnp.sin(args), jnp.cos(args)], axis=-1)

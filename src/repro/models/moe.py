@@ -1,0 +1,121 @@
+"""Mixture-of-Experts layer: top-k routing, capacity-bounded dispatch,
+optional shared experts (DeepSeek), load-balancing aux loss.
+
+Dispatch is *gather/scatter*-based rather than the GShard one-hot einsum:
+tokens are expanded k-fold, ranked within their expert by a cumulative
+count, and scattered into a dense ``(E, C, d)`` buffer (rank >= capacity is
+dropped, standard capacity-style routing). This keeps dispatch FLOPs ~0 (it
+is data movement, which is what it is on hardware) instead of the
+``O(T*E*C*d)`` matmul the one-hot formulation pays -- on the dry-run
+roofline this shows up as a useful-flops ratio close to 1.
+
+Routing is *grouped by batch row* (G = B groups of S tokens): the rank
+cumsum and the scatter then stay local to each data shard, so GSPMD only
+needs the expert all-to-all itself, not a token-axis gather. Decode steps
+(S == 1) route the whole batch as one group instead so per-expert capacity
+never rounds down to nothing.
+
+Sharding: the expert dimension E of the weights is sharded over the
+``model`` mesh axis (EP); the scatter/gather lowers to the expected
+all-to-all-like exchange.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .layers import dense_init, mlp, mlp_init
+
+__all__ = ["moe_init", "moe_apply"]
+
+
+def moe_init(key, cfg: ArchConfig, dtype) -> Dict:
+    m = cfg.moe
+    d = cfg.d_model
+    k_router, k_exp, k_shared = jax.random.split(key, 3)
+
+    def expert_stack(key, n):
+        keys = jax.random.split(key, n)
+        return jax.vmap(lambda kk: mlp_init(kk, d, m.d_ff, cfg.act, dtype))(keys)
+
+    p = {
+        "router": dense_init(k_router, (d, m.n_experts), dtype, scale=0.02),
+        "experts": expert_stack(k_exp, m.n_experts),  # leaves: (E, ...)
+    }
+    if m.n_shared:
+        p["shared"] = mlp_init(k_shared, d, m.d_ff * m.n_shared, cfg.act, dtype)
+    return p
+
+
+def _dispatch_group(cfg: ArchConfig, xg: jnp.ndarray, gates, idx, cap: int):
+    """One routing group. xg: (Tg, d); gates/idx: (Tg, k).
+
+    Returns (buf (E, cap, d), slot (Tg*k,), keep (Tg*k,), flat_t (Tg*k,),
+    flat_g (Tg*k,)).
+    """
+    m = cfg.moe
+    tg, d = xg.shape
+    e, k = m.n_experts, m.top_k
+    flat_e = idx.reshape(-1)
+    flat_g = gates.reshape(-1)
+    flat_t = jnp.repeat(jnp.arange(tg), k)
+    # rank of each expanded token within its expert (order = token order)
+    onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)  # (Tg*k, E)
+    prior = jnp.cumsum(onehot, axis=0) - onehot  # same-expert tokens before
+    rank = jnp.take_along_axis(prior, flat_e[:, None], axis=1)[:, 0]
+    keep = rank < cap
+    slot = flat_e * cap + jnp.where(keep, rank, 0)
+    buf = jnp.zeros((e * cap, d), xg.dtype)
+    buf = buf.at[slot].add(jnp.where(keep[:, None], xg[flat_t], 0))
+    return buf.reshape(e, cap, d), slot, keep, flat_t, flat_g
+
+
+def _combine_group(expert_out_flat, slot, keep, flat_t, flat_g, tg, d):
+    gathered = expert_out_flat[slot] * jnp.where(keep, flat_g, 0.0)[:, None].astype(
+        expert_out_flat.dtype
+    )
+    return jnp.zeros((tg, d), expert_out_flat.dtype).at[flat_t].add(gathered)
+
+
+def moe_apply(
+    params: Dict, cfg: ArchConfig, x: jnp.ndarray
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, d) -> (y (B, S, d), aux_loss scalar f32)."""
+    m = cfg.moe
+    b, s, d = x.shape
+    e, k = m.n_experts, m.top_k
+    # group by batch row (stays local to the data shard); decode: one group
+    g, tg = (b, s) if s > 1 else (1, b)
+    xg = x.reshape(g, tg, d)
+
+    logits = jnp.einsum("gtd,de->gte", xg, params["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    # load-balancing aux loss (Switch-style): E * <f_e> . <p_e>
+    me = probs.mean(axis=(0, 1))
+    fe = jax.nn.one_hot(idx[..., 0], e, dtype=jnp.float32).mean(axis=(0, 1))
+    aux = e * jnp.sum(fe * me) * m.router_aux_weight
+
+    cap = int(max(1, round(tg * k / e * m.capacity_factor)))
+
+    buf, slot, keep, flat_t, flat_g = jax.vmap(
+        lambda xx, gg, ii: _dispatch_group(cfg, xx, gg, ii, cap)
+    )(xg, gates, idx)
+    # buf: (G, E, cap, d) -> experts see all groups' slices: (E, G*cap, d)
+    ein = jnp.moveaxis(buf, 1, 0).reshape(e, g * cap, d)
+    eout = jax.vmap(lambda p, h: mlp(p, h, cfg.act))(params["experts"], ein)
+    eout = jnp.moveaxis(eout.reshape(e, g, cap, d), 1, 0).reshape(g, e * cap, d)
+
+    y = jax.vmap(lambda eo, sl, kp, ft, fg: _combine_group(eo, sl, kp, ft, fg, tg, d))(
+        eout, slot, keep, flat_t, flat_g
+    )
+
+    if m.n_shared:
+        y = y + mlp(params["shared"], xg, cfg.act)
+    return y.reshape(b, s, d), aux

@@ -1,0 +1,261 @@
+"""Mamba2 block (SSD -- state-space duality, arXiv:2405.21060).
+
+The SSD formulation is the TPU-friendly one: the selective scan becomes
+chunked matmuls (MXU food) + one short inter-chunk recurrence:
+
+* intra-chunk: ``Y_diag[t] = sum_{s<=t} (C_t . B_s) * exp(cum_t - cum_s)
+  * dt_s * x_s`` -- an (Q x Q) masked matmul per chunk;
+* chunk states: ``S_c = sum_s exp(cum_last - cum_s) * dt_s * B_s (x) x_s``;
+* inter-chunk: ``S_c = exp(sum_c) * S_{c-1} + S_c_local`` via ``lax.scan``;
+* off-diagonal: ``Y_off[t] = (C_t . S_{c-1}) * exp(cum_t)``.
+
+Decode is the O(1) recurrent update on the carried state -- this is why the
+ssm/hybrid architectures run the ``long_500k`` shape: the "KV cache" is a
+constant-size ``(B, H, P, N)`` state plus a (d_conv-1)-deep conv window.
+
+``ssd_reference`` is the naive per-token recurrence used as the test oracle.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .layers import dense_init, rmsnorm
+
+__all__ = ["ssm_init", "ssm_apply", "ssd_reference", "ssm_state_shapes"]
+
+
+def _dims(cfg: ArchConfig):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    n_heads = d_inner // s.head_dim
+    conv_ch = d_inner + 2 * s.n_groups * s.d_state
+    return d_inner, n_heads, conv_ch
+
+
+def ssm_init(key, cfg: ArchConfig, dtype) -> Dict:
+    """Projections are kept as separate matrices (wz/wx/wbc/wdt, split convs)
+    rather than one fused in_proj so the tensor-parallel rules can shard the
+    d_inner-sized outputs over the ``model`` axis while the small B/C/dt
+    streams stay replicated."""
+    s = cfg.ssm
+    d = cfg.d_model
+    d_inner, h, _ = _dims(cfg)
+    bc_ch = 2 * s.n_groups * s.d_state
+    k1, k2, k3, k4, k5, k6 = jax.random.split(key, 6)
+    return {
+        "wz": dense_init(k1, (d, d_inner), dtype),
+        "wx": dense_init(k2, (d, d_inner), dtype),
+        "wbc": dense_init(k3, (d, bc_ch), dtype),
+        "wdt": dense_init(k5, (d, h), dtype),
+        "conv_x_w": dense_init(jax.random.fold_in(k2, 1), (s.d_conv, d_inner), dtype, scale=0.5),
+        "conv_x_b": jnp.zeros((d_inner,), dtype),
+        "conv_bc_w": dense_init(jax.random.fold_in(k3, 1), (s.d_conv, bc_ch), dtype, scale=0.5),
+        "conv_bc_b": jnp.zeros((bc_ch,), dtype),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "a_log": jnp.log(
+            jnp.linspace(1.0, 16.0, h, dtype=jnp.float32)
+        ),  # A in [-16, -1]
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "norm_w": jnp.ones((d_inner,), dtype),
+        "out_proj": dense_init(k4, (d_inner, d), dtype),
+    }
+
+
+def ssm_state_shapes(cfg: ArchConfig, batch: int):
+    """Decode-cache shapes (the SSM analogue of a KV cache)."""
+    s = cfg.ssm
+    d_inner, h, _ = _dims(cfg)
+    return {
+        "conv_x": (batch, s.d_conv - 1, d_inner),
+        "conv_bc": (batch, s.d_conv - 1, 2 * s.n_groups * s.d_state),
+        "ssm": (batch, h, s.head_dim, s.d_state),
+    }
+
+
+def _segsum(x):
+    """exp-arg matrix: out[..., t, s] = sum_{s < r <= t} x[..., r] (t >= s)."""
+    t = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((t, t), bool))
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def _ssd_chunked(xdt, dta, b_mat, c_mat, chunk: int, state0):
+    """Chunked SSD scan.
+
+    xdt: (B,L,H,P) -- dt-weighted inputs; dta: (B,L,H) -- dt*A decays;
+    b_mat/c_mat: (B,L,H,N) (groups already broadcast to heads);
+    state0: (B,H,P,N) or None. Returns (y (B,L,H,P), state (B,H,P,N)).
+    """
+    bsz, l, h, p = xdt.shape
+    n = b_mat.shape[-1]
+    pad = (-l) % chunk
+    if pad:
+        xdt = jnp.pad(xdt, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dta = jnp.pad(dta, ((0, 0), (0, pad), (0, 0)))
+        b_mat = jnp.pad(b_mat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        c_mat = jnp.pad(c_mat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    lc = xdt.shape[1]
+    nc = lc // chunk
+    xdt_c = xdt.reshape(bsz, nc, chunk, h, p)
+    dta_c = dta.reshape(bsz, nc, chunk, h)
+    b_c = b_mat.reshape(bsz, nc, chunk, h, n)
+    c_c = c_mat.reshape(bsz, nc, chunk, h, n)
+
+    cum = jnp.cumsum(dta_c, axis=2)  # (B,nc,Q,H)
+
+    # intra-chunk (diagonal blocks)
+    larg = _segsum(jnp.moveaxis(dta_c, 3, 2))  # (B,nc,H,Q,Q)
+    lmat = jnp.exp(larg)
+    scores = jnp.einsum("bcthn,bcshn->bchts", c_c, b_c) * lmat.astype(c_c.dtype)
+    y_diag = jnp.einsum("bchts,bcshp->bcthp", scores, xdt_c)
+
+    # per-chunk final states
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)  # (B,nc,Q,H)
+    states = jnp.einsum(
+        "bcshn,bcsh,bcshp->bchpn", b_c, decay_to_end.astype(b_c.dtype), xdt_c
+    )  # (B,nc,H,P,N)
+
+    # inter-chunk recurrence
+    chunk_decay = jnp.exp(cum[:, :, -1, :])  # (B,nc,H)
+    if state0 is None:
+        state0 = jnp.zeros((bsz, h, p, n), xdt.dtype)
+
+    def step(s_prev, inp):
+        dec, st = inp  # (B,H), (B,H,P,N)
+        s_new = s_prev * dec[..., None, None].astype(s_prev.dtype) + st
+        return s_new, s_prev
+
+    final, prevs = jax.lax.scan(
+        step,
+        state0,
+        (jnp.moveaxis(chunk_decay, 1, 0), jnp.moveaxis(states, 1, 0)),
+    )
+    prev_states = jnp.moveaxis(prevs, 0, 1)  # (B,nc,H,P,N) state before chunk
+
+    # off-diagonal contribution from carried state
+    in_decay = jnp.exp(cum)  # (B,nc,Q,H)
+    y_off = jnp.einsum(
+        "bcthn,bchpn->bcthp", c_c * in_decay[..., None].astype(c_c.dtype), prev_states
+    )
+
+    y = (y_diag + y_off).reshape(bsz, lc, h, p)[:, :l]
+    return y, final
+
+
+def ssd_reference(xdt, dta, b_mat, c_mat, state0=None):
+    """Naive per-token recurrence (oracle): S_t = exp(dta_t) S + B_t (x) xdt_t;
+    y_t = C_t . S_t. Shapes as in :func:`_ssd_chunked`."""
+    bsz, l, h, p = xdt.shape
+    n = b_mat.shape[-1]
+    if state0 is None:
+        state0 = jnp.zeros((bsz, h, p, n), xdt.dtype)
+
+    def step(s, inp):
+        xt, at, bt, ct = inp
+        s = s * jnp.exp(at)[..., None, None].astype(s.dtype) + jnp.einsum(
+            "bhp,bhn->bhpn", xt, bt
+        )
+        y = jnp.einsum("bhpn,bhn->bhp", s, ct)
+        return s, y
+
+    final, ys = jax.lax.scan(
+        step,
+        state0,
+        (
+            jnp.moveaxis(xdt, 1, 0),
+            jnp.moveaxis(dta, 1, 0),
+            jnp.moveaxis(b_mat, 1, 0),
+            jnp.moveaxis(c_mat, 1, 0),
+        ),
+    )
+    return jnp.moveaxis(ys, 0, 1), final
+
+
+def _causal_conv(u, w, b, conv_state):
+    """Depthwise causal conv. u: (B,S,C); w: (K,C); returns (y, new_state)."""
+    k = w.shape[0]
+    bsz, s, c = u.shape
+    if conv_state is None:
+        ext = jnp.pad(u, ((0, 0), (k - 1, 0), (0, 0)))
+    else:
+        ext = jnp.concatenate([conv_state.astype(u.dtype), u], axis=1)
+    y = sum(
+        ext[:, i : i + s, :] * w[i][None, None, :] for i in range(k)
+    ) + b[None, None, :]
+    new_state = ext[:, -(k - 1) :, :] if k > 1 else None
+    return y, new_state
+
+
+def ssm_apply(
+    params: Dict,
+    cfg: ArchConfig,
+    x: jnp.ndarray,
+    cache: Optional[Dict] = None,
+) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    """Mamba2 block. x: (B, S, d_model) -> (y, updated cache or None).
+
+    cache = {"conv": (B, K-1, C), "ssm": (B, H, P, N)} for decode/prefill.
+    """
+    s_cfg = cfg.ssm
+    d_inner, h, _ = _dims(cfg)
+    g, n, p = s_cfg.n_groups, s_cfg.d_state, s_cfg.head_dim
+    bsz, seq, _ = x.shape
+
+    z = jnp.einsum("bsd,de->bse", x, params["wz"])
+    xc = jnp.einsum("bsd,de->bse", x, params["wx"])
+    bc_raw = jnp.einsum("bsd,de->bse", x, params["wbc"])
+    dt_raw = jnp.einsum("bsd,de->bse", x, params["wdt"])
+
+    conv_x_state = cache["conv_x"] if cache is not None else None
+    conv_bc_state = cache["conv_bc"] if cache is not None else None
+    xs, new_conv_x = _causal_conv(
+        xc, params["conv_x_w"], params["conv_x_b"], conv_x_state
+    )
+    bc, new_conv_bc = _causal_conv(
+        bc_raw, params["conv_bc_w"], params["conv_bc_b"], conv_bc_state
+    )
+    xs = jax.nn.silu(xs)
+    bm, cm = jnp.split(jax.nn.silu(bc), [g * n], axis=-1)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])  # (B,S,H)
+    a = -jnp.exp(params["a_log"])  # (H,)
+    dta = dt * a  # (B,S,H)
+
+    xh = xs.reshape(bsz, seq, h, p)
+    xdt = xh * dt[..., None].astype(xh.dtype)
+    # broadcast groups to heads
+    rep = h // g
+    bmh = jnp.repeat(bm.reshape(bsz, seq, g, n), rep, axis=2)
+    cmh = jnp.repeat(cm.reshape(bsz, seq, g, n), rep, axis=2)
+
+    state0 = cache["ssm"] if cache is not None else None
+    if seq == 1 and cache is not None:
+        # O(1) decode update
+        st = state0 * jnp.exp(dta[:, 0])[..., None, None].astype(state0.dtype)
+        st = st + jnp.einsum("bhp,bhn->bhpn", xdt[:, 0], bmh[:, 0])
+        y = jnp.einsum("bhpn,bhn->bhp", st, cmh[:, 0])[:, None]
+        final = st
+    else:
+        # keep decays in f32 inside the scan; cast at the consumption points
+        y, final = _ssd_chunked(xdt, dta, bmh, cmh, s_cfg.chunk, state0)
+
+    y = y + xh * params["d_skip"][None, None, :, None].astype(xh.dtype)
+    y = y.reshape(bsz, seq, d_inner)
+    y = rmsnorm(params["norm_w"], y * jax.nn.silu(z))
+    out = jnp.einsum("bse,ed->bsd", y, params["out_proj"])
+
+    new_cache = None
+    if cache is not None:
+        new_cache = {
+            "conv_x": new_conv_x.astype(cache["conv_x"].dtype),
+            "conv_bc": new_conv_bc.astype(cache["conv_bc"].dtype),
+            "ssm": final,
+        }
+    return out, new_cache

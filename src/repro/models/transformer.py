@@ -1,0 +1,241 @@
+"""Block + stack assembly.
+
+A *block* = pre-norm mixer (attention or SSD) + pre-norm FFN (MLP or MoE),
+with an optional cross-attention sub-layer (enc-dec decoders).
+
+A *stack* is a list of **segments**: (pattern, repeats) where pattern is a
+short tuple of (mixer, ffn) block kinds and the segment executes
+``pattern * repeats`` layers. Parameters of the r repeats are stacked on a
+leading axis and consumed with ``jax.lax.scan`` so each distinct block body
+is traced exactly once -- jamba's 8-layer period, deepseek's 3 dense + 58
+MoE split, and uniform stacks all reduce to this representation, and
+compile time at 512 fake devices stays sane.
+
+Remat: the per-block function is wrapped in ``jax.checkpoint`` with a
+selectable policy ('none' | 'dots' | 'full') -- a §Perf hillclimb lever.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.ad_checkpoint import checkpoint_name
+
+from ..configs.base import ArchConfig
+from .attention import attn_init, attention
+from .layers import mlp, mlp_init, rmsnorm, rmsnorm_init
+from .moe import moe_apply, moe_init
+from .ssm import ssm_apply, ssm_init
+
+__all__ = [
+    "segments",
+    "stack_init",
+    "stack_apply",
+    "block_init",
+    "block_apply",
+    "REMAT_POLICIES",
+]
+
+REMAT_POLICIES = {
+    "none": None,
+    "dots": jax.checkpoint_policies.checkpoint_dots,
+    "dots_no_batch": jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims,
+    "full": jax.checkpoint_policies.nothing_saveable,
+    # save exactly the post-collective sub-layer outputs: the backward pass
+    # then re-runs elementwise work but NOT the forward TP all-reduces --
+    # the collective-term lever of the SPerf hillclimb
+    "save_block_io": jax.checkpoint_policies.save_only_these_names(
+        "mixer_out", "ffn_out"
+    ),
+}
+
+
+def segments(cfg: ArchConfig) -> List[Tuple[Tuple[Tuple[str, str], ...], int]]:
+    """Decompose layer kinds into (pattern, repeats) segments."""
+    kinds = list(cfg.layer_kinds())
+    segs: List[Tuple[Tuple[Tuple[str, str], ...], int]] = []
+    first_dense = cfg.moe.first_dense if cfg.moe else 0
+    if first_dense:
+        segs.append((tuple(kinds[:first_dense]), 1))
+        kinds = kinds[first_dense:]
+    n = len(kinds)
+    for p in range(1, n + 1):
+        if n % p:
+            continue
+        unit = kinds[:p]
+        if kinds == unit * (n // p):
+            segs.append((tuple(unit), n // p))
+            break
+    return segs
+
+
+# ---------------------------------------------------------------------------
+# Single block
+# ---------------------------------------------------------------------------
+def block_init(key, cfg: ArchConfig, mixer: str, ffn: str, dtype, cross: bool = False):
+    keys = jax.random.split(key, 6)
+    p: Dict = {"norm1": rmsnorm_init(cfg.d_model, dtype, cfg.rms_offset)}
+    if mixer == "attn":
+        p["mixer"] = attn_init(keys[0], cfg, dtype)
+    else:
+        p["mixer"] = ssm_init(keys[0], cfg, dtype)
+    if cross:
+        p["norm_cross"] = rmsnorm_init(cfg.d_model, dtype, cfg.rms_offset)
+        p["cross"] = attn_init(keys[1], cfg, dtype, cross=True)
+    if ffn != "none":
+        p["norm2"] = rmsnorm_init(cfg.d_model, dtype, cfg.rms_offset)
+        p["ffn"] = (
+            moe_init(keys[2], cfg, dtype) if ffn == "moe" else mlp_init(keys[2], cfg.d_model, cfg.d_ff, cfg.act, dtype)
+        )
+    return p
+
+
+def block_apply(
+    params,
+    cfg: ArchConfig,
+    mixer: str,
+    ffn: str,
+    x,
+    *,
+    positions,
+    mode: str,
+    cache: Optional[Dict],
+    enc_out: Optional[jnp.ndarray],
+    impl: str,
+    cross: bool = False,
+):
+    """Returns (x, new_cache, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    new_cache: Dict = {}
+    h = rmsnorm(params["norm1"], x, cfg.rms_offset)
+    if mixer == "attn":
+        mixer_cache = cache.get("mixer") if cache else None
+        h, c = attention(
+            params["mixer"], cfg, h, positions=positions, mode=mode,
+            cache=mixer_cache, impl=impl,
+        )
+        if c is not None:
+            new_cache["mixer"] = c
+    else:
+        mixer_cache = cache.get("mixer") if cache else None
+        h, c = ssm_apply(params["mixer"], cfg, h, cache=mixer_cache)
+        if c is not None:
+            new_cache["mixer"] = c
+    h = checkpoint_name(h, "mixer_out")
+    x = x + h
+    if cross:
+        h = rmsnorm(params["norm_cross"], x, cfg.rms_offset)
+        cross_cache = cache.get("cross") if cache else None
+        h, c = attention(
+            params["cross"], cfg, h, positions=positions, mode="cross",
+            cache=cross_cache, kv_source=enc_out, impl=impl,
+        )
+        if c is not None:
+            new_cache["cross"] = c
+        x = x + h
+    if ffn != "none":
+        h = rmsnorm(params["norm2"], x, cfg.rms_offset)
+        if ffn == "moe":
+            h, aux = moe_apply(params["ffn"], cfg, h)
+        else:
+            h = mlp(params["ffn"], h, cfg.act)
+        h = checkpoint_name(h, "ffn_out")
+        x = x + h
+    return x, (new_cache or None), aux
+
+
+# ---------------------------------------------------------------------------
+# Stacks
+# ---------------------------------------------------------------------------
+def stack_init(key, cfg: ArchConfig, dtype, *, cross: bool = False, segs=None):
+    """Parameters: {'seg0': (slot params stacked over repeats), ...}."""
+    segs = segs if segs is not None else segments(cfg)
+    out = {}
+    for si, (pattern, reps) in enumerate(segs):
+        slot_params = []
+        for j, (mixer, ffn) in enumerate(pattern):
+            keys = jax.random.split(jax.random.fold_in(key, si * 131 + j), reps)
+            stacked = jax.vmap(
+                lambda kk: block_init(kk, cfg, mixer, ffn, dtype, cross=cross)
+            )(keys)
+            slot_params.append(stacked)
+        out[f"seg{si}"] = tuple(slot_params)
+    return out
+
+
+def stack_apply(
+    params,
+    cfg: ArchConfig,
+    x,
+    *,
+    positions,
+    mode: str = "causal",
+    caches=None,
+    enc_out=None,
+    impl: str = "auto",
+    remat: str = "none",
+    cross: bool = False,
+    segs=None,
+):
+    """Run the full stack. Returns (x, new_caches, aux_sum).
+
+    ``caches`` mirrors the parameter structure: {'seg0': (slot caches with
+    leaves stacked over repeats, ...)} or None for training.
+    """
+    segs = segs if segs is not None else segments(cfg)
+    aux_total = jnp.zeros((), jnp.float32)
+    new_caches = {} if caches is not None else None
+
+    for si, (pattern, reps) in enumerate(segs):
+        seg_p = params[f"seg{si}"]
+        seg_c = caches.get(f"seg{si}") if caches is not None else None
+
+        def one_layer(x, slot_params, slot_caches, pattern=pattern):
+            new_slot_caches = []
+            aux = jnp.zeros((), jnp.float32)
+            for j, (mixer, ffn) in enumerate(pattern):
+                c_in = slot_caches[j] if slot_caches is not None else None
+                x, c_out, a = block_apply(
+                    slot_params[j], cfg, mixer, ffn, x,
+                    positions=positions, mode=mode, cache=c_in,
+                    enc_out=enc_out, impl=impl, cross=cross,
+                )
+                new_slot_caches.append(c_out)
+                aux = aux + a
+            return x, tuple(new_slot_caches), aux
+
+        policy = REMAT_POLICIES.get(remat, None)
+        if remat != "none":
+            one_layer = jax.checkpoint(
+                one_layer, policy=policy, static_argnums=()
+            )
+
+        if reps == 1:
+            sp = jax.tree.map(lambda a: a[0], seg_p)
+            sc = jax.tree.map(lambda a: a[0], seg_c) if seg_c is not None else None
+            x, c_out, aux = one_layer(x, sp, sc)
+            aux_total = aux_total + aux
+            if new_caches is not None:
+                new_caches[f"seg{si}"] = (
+                    jax.tree.map(lambda a: a[None], c_out) if c_out is not None else None
+                )
+        else:
+
+            def body(carry, xs):
+                x, aux_acc = carry
+                if seg_c is not None:
+                    sp, sc = xs
+                else:
+                    sp, sc = xs, None
+                x, c_out, aux = one_layer(x, sp, sc)
+                return (x, aux_acc + aux), c_out
+
+            xs = (seg_p, seg_c) if seg_c is not None else seg_p
+            (x, aux_total), seg_c_out = jax.lax.scan(body, (x, aux_total), xs)
+            if new_caches is not None:
+                new_caches[f"seg{si}"] = seg_c_out
+
+    return x, new_caches, aux_total

@@ -1,0 +1,5 @@
+"""Serving substrate: KV caches (incl. MLA latents, SWA rings, SSM states),
+prefill/decode steps, batched generation."""
+
+from .kvcache import init_caches  # noqa: F401
+from .serve_step import make_decode_step, make_prefill, generate  # noqa: F401

@@ -1,0 +1,108 @@
+"""KV-cache construction, mirroring the stack's segment/slot structure.
+
+Cache kinds per block:
+* attention: k/v rings (full length, or ``window`` slots for SWA);
+* MLA: the compressed latent ``ckv`` + shared rope key ``krope`` -- the
+  per-token cache is r_kv + d_rope floats instead of 2*H*Dh (DeepSeek's
+  ~28x cache shrink is structural here);
+* SSD: constant-size conv window + state (this is why ssm/hybrid archs run
+  long_500k: the "cache" does not grow with context);
+* enc-dec decoders additionally get per-layer cross K/V (written once at
+  prefill) -- ``enc_out`` itself is carried so prefill can compute them.
+
+Leaves are stacked over segment repeats to match ``lax.scan``'s xs layout.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..models.ssm import ssm_state_shapes
+from ..models.transformer import segments
+
+__all__ = ["init_caches", "cache_bytes"]
+
+
+def _attn_cache(cfg: ArchConfig, batch: int, max_len: int, dtype):
+    a = cfg.attn
+    if a.kind == "mla":
+        return {
+            "ckv": jnp.zeros((batch, max_len, a.kv_lora_rank), dtype),
+            "krope": jnp.zeros((batch, max_len, a.rope_head_dim), dtype),
+            "idx": jnp.zeros((), jnp.int32),
+        }
+    length = min(max_len, a.window) if a.kind == "swa" and a.window else max_len
+    kh, dh = cfg.n_kv_heads, cfg.head_dim_
+    return {
+        "k": jnp.zeros((batch, length, kh, dh), dtype),
+        "v": jnp.zeros((batch, length, kh, dh), dtype),
+        "idx": jnp.zeros((), jnp.int32),
+    }
+
+
+def _cross_cache(cfg: ArchConfig, batch: int, dtype):
+    kh, dh = cfg.n_kv_heads, cfg.head_dim_
+    n = cfg.n_frontend_tokens
+    return {
+        "k": jnp.zeros((batch, n, kh, dh), dtype),
+        "v": jnp.zeros((batch, n, kh, dh), dtype),
+        "idx": jnp.zeros((), jnp.int32),
+    }
+
+
+def _ssm_cache(cfg: ArchConfig, batch: int, dtype):
+    return {k: jnp.zeros(v, dtype) for k, v in ssm_state_shapes(cfg, batch).items()}
+
+
+def _stack_leaf(cache, reps: int):
+    return jax.tree.map(lambda x: jnp.broadcast_to(x[None], (reps, *x.shape)), cache)
+
+
+def init_caches(
+    cfg: ArchConfig,
+    batch: int,
+    max_len: int,
+    dtype=None,
+    include_enc: bool = False,
+) -> Dict:
+    """Build the full cache pytree for ``forward``.
+
+    ``include_enc=False`` (prefill): the enc-dec encoder output is not yet
+    known; forward computes it and adds 'enc_out' + cross K/V.
+    """
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    stack: Dict = {}
+    for si, (pattern, reps) in enumerate(segments(cfg)):
+        slots = []
+        for mixer, _ffn in pattern:
+            c: Dict = {}
+            if mixer == "attn":
+                c["mixer"] = _attn_cache(cfg, batch, max_len, dtype)
+            else:
+                c["mixer"] = _ssm_cache(cfg, batch, dtype)
+            if cfg.enc_dec:
+                c["cross"] = _cross_cache(cfg, batch, dtype)
+            slots.append(_stack_leaf(c, reps))
+        stack[f"seg{si}"] = tuple(slots)
+    caches: Dict = {"stack": stack}
+    if include_enc:
+        caches["enc_out"] = jnp.zeros(
+            (batch, cfg.n_frontend_tokens, cfg.d_model), dtype
+        )
+    return caches
+
+
+def cache_bytes(cfg: ArchConfig, batch: int, max_len: int) -> int:
+    """Analytic cache footprint (for the roofline / serving planner)."""
+    import math
+
+    caches = jax.eval_shape(
+        lambda: init_caches(cfg, batch, max_len, include_enc=cfg.enc_dec)
+    )
+    return sum(
+        int(math.prod(l.shape)) * l.dtype.itemsize for l in jax.tree.leaves(caches)
+    )

@@ -1,0 +1,9 @@
+"""Sharding rules: parameter/activation/cache PartitionSpecs (DP/TP/EP/SP)."""
+
+from .partition import (  # noqa: F401
+    batch_specs,
+    cache_specs,
+    data_axes,
+    opt_state_specs,
+    param_specs,
+)

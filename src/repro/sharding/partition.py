@@ -1,0 +1,251 @@
+"""PartitionSpec rules for every parameter / activation / cache tensor.
+
+Strategy (Megatron-style TP x DP, EP for experts, ZeRO-1 for optimizer
+state):
+
+* batch-like dims -> the data axes (``('pod', 'data')`` on the multi-pod
+  mesh, ``('data',)`` single-pod);
+* attention head / ffn hidden / vocab dims -> the ``model`` axis;
+* MoE experts -> the ``model`` axis (EP) when E divides the axis size,
+  otherwise TP *within* experts (mixtral's 8 experts on a 16-wide axis);
+* SSM d_inner-sized dims -> ``model``; the small B/C/dt streams replicate;
+* optimizer moments -> the parameter spec plus the data axes on the largest
+  still-unsharded dim (ZeRO-1);
+* KV caches -> batch over data, kv-heads over model; MLA latents and SSM
+  states shard their structurally analogous dims.
+
+Rules are name/context-based over the parameter tree (tree_map_with_path),
+so new layers that reuse the naming conventions are covered automatically.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from ..configs.base import ArchConfig
+
+__all__ = [
+    "data_axes",
+    "param_specs",
+    "opt_state_specs",
+    "batch_specs",
+    "cache_specs",
+]
+
+
+def data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return dict(zip(mesh.axis_names, mesh.devices.shape)).get(name, 1)
+
+
+# leaf-name buckets ---------------------------------------------------------
+_SHARD_LAST = {"wq", "wk", "wv", "wq_b", "wkv_b", "up", "gate", "wz", "wx", "proj", "lm_head"}
+_SHARD_PENULT_LAST = {"wo", "down", "out_proj"}  # (in=model-sharded, out)
+_REPLICATE = {
+    "router", "wq_a", "wkv_a", "wbc", "wdt", "conv_x_b", "conv_bc_w",
+    "conv_bc_b", "dt_bias", "a_log", "d_skip", "norm_w", "q_norm", "kv_norm",
+    "norm1", "norm2", "norm_cross", "final_norm", "enc_norm", "norm_h",
+    "norm_e", "pos_embed", "conv_b",
+}
+_SHARD_LAST_1D = {"conv_x_w", "conv_x_b"}  # depthwise conv over d_inner
+
+
+def _name_of(path) -> str:
+    names = [p.key for p in path if isinstance(p, jax.tree_util.DictKey)]
+    return names[-1] if names else ""
+
+
+def _add_dp(spec: P, shape, dp: Tuple[str, ...], mesh: Mesh, min_elems: int = 1 << 16) -> P:
+    """Additionally shard the largest evenly-divisible free dim over the
+    (not already used) data axes (FSDP / ZeRO-style; GSPMD inserts the
+    per-layer gather)."""
+    if not dp or len(shape) == 0 or int(np.prod(shape)) < min_elems:
+        return spec
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    used = set()
+    for e in entries:
+        if e is None:
+            continue
+        used.update(e if isinstance(e, tuple) else (e,))
+    dp = tuple(a for a in dp if a not in used)
+    if not dp:
+        return spec
+    dp_size = int(np.prod([_axis_size(mesh, a) for a in dp]))
+    free = [
+        i for i, s in enumerate(entries)
+        if s is None and shape[i] % max(dp_size, 1) == 0
+    ]
+    if not free:
+        return spec
+    i_best = max(free, key=lambda i: shape[i])
+    entries[i_best] = dp if len(dp) > 1 else dp[0]
+    return P(*entries)
+
+
+def _in_experts(path) -> bool:
+    return any(
+        isinstance(p, jax.tree_util.DictKey) and p.key == "experts" for p in path
+    )
+
+
+def _divisible(shape, entries, mesh) -> bool:
+    """Every sharded dim must divide evenly (jit argument requirement)."""
+    for size, e in zip(shape, entries):
+        if e is None:
+            continue
+        axes = e if isinstance(e, tuple) else (e,)
+        total = int(np.prod([_axis_size(mesh, a) for a in axes]))
+        if total and size % total:
+            return False
+    return True
+
+
+def _spec_for(path, leaf, cfg: ArchConfig, mesh: Mesh, fsdp: bool = False) -> P:
+    name = _name_of(path)
+    shape = tuple(getattr(leaf, "shape", ()))
+    rank = len(shape)
+    model_size = _axis_size(mesh, "model")
+    dp = data_axes(mesh) if fsdp else ()
+
+    def pad(*candidates):
+        """First candidate whose sharded dims divide evenly; candidates are
+        right-aligned tails, left-padded with None for stacked leading dims.
+        FSDP then adds the data axes on the largest remaining free dim."""
+        for tail in list(candidates) + [[None] * rank]:
+            entries = [None] * (rank - len(tail)) + list(tail)
+            if _divisible(shape, entries, mesh):
+                spec = P(*entries)
+                return _add_dp_checked(spec, shape, dp, mesh) if dp else spec
+        return P(*([None] * rank))
+
+    if _in_experts(path):
+        e = cfg.moe.n_experts
+        if e % model_size == 0:
+            # EP: shard the expert dim (dim -3 of (E, d, f) matrices)
+            return pad(["model", None, None])
+        # TP within experts
+        if name in ("up", "gate"):
+            return pad([None, None, "model"], [None, "model", None])
+        return pad([None, "model", None], [None, None, "model"])
+
+    if name == "embed":
+        # vocab-sharded; odd vocabs (whisper 51865) fall back to d_model
+        return pad(["model", None], [None, "model"])
+    if name in _REPLICATE:
+        return P(*([None] * rank))
+    if name in _SHARD_LAST_1D:
+        return pad(["model"])
+    if name in _SHARD_LAST:
+        return pad([None, "model"], ["model", None])
+    if name in _SHARD_PENULT_LAST:
+        return pad(["model", None], [None, "model"])
+    # default: replicate (biases, scalars, anything unrecognized)
+    return P(*([None] * rank))
+
+
+def _add_dp_checked(spec: P, shape, dp, mesh) -> P:
+    return _add_dp(spec, shape, dp, mesh)
+
+
+def param_specs(cfg: ArchConfig, params: Any, mesh: Mesh, fsdp: bool = False):
+    """PartitionSpec pytree matching ``params`` (works on shapes too).
+
+    ``fsdp=True`` additionally shards every large parameter over the data
+    axes (ZeRO-3 / weight-gather) -- required for the >50B archs, where
+    TP-16 alone leaves tens of GB of parameters per chip."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _spec_for(path, leaf, cfg, mesh, fsdp), params
+    )
+
+
+def opt_state_specs(cfg: ArchConfig, params: Any, mesh: Mesh, fsdp: bool = False):
+    """ZeRO-1: moments = param spec + data axes on the largest free dim.
+    (With fsdp=True the param spec already includes the data axes.)"""
+    dp = data_axes(mesh)
+    dp_size = int(np.prod([_axis_size(mesh, a) for a in dp]))
+
+    def zero1(path, leaf):
+        spec = _spec_for(path, leaf, cfg, mesh, fsdp)
+        if dp_size == 1:
+            return spec
+        return _add_dp(spec, leaf.shape, dp, mesh)
+
+    return jax.tree_util.tree_map_with_path(zero1, params)
+
+
+def batch_specs(cfg: ArchConfig, mesh: Mesh, batch_size: int = 0) -> Dict[str, P]:
+    """Input shardings: batch over the data axes (replicated when the batch
+    is smaller than the data extent, e.g. long_500k's global_batch=1)."""
+    dp = data_axes(mesh)
+    dp_size = int(np.prod([_axis_size(mesh, a) for a in dp]))
+    b = dp if len(dp) > 1 else dp[0]
+    if batch_size and batch_size % max(dp_size, 1):
+        b = None
+    specs = {
+        "tokens": P(b, None),
+        "labels": P(b, None),
+        "positions": P(b, None),
+    }
+    if cfg.frontend or cfg.enc_dec:
+        specs["frontend"] = P(b, None, None)
+    if cfg.rope == "mrope":
+        specs["positions"] = P(b, None, None)
+    return specs
+
+
+def _cache_leaf_spec(path, leaf, cfg, mesh, b, seq_axis):
+    """Cache shardings with divisibility-guarded fallbacks.
+
+    * batch over the data axes when it divides; otherwise (long_500k B=1)
+      the cache *length* dim is sharded over data instead -- context
+      parallelism over the KV/ring cache;
+    * kv-heads over model when divisible (llama KH=8 on model=16 falls back
+      to head_dim); SSM states shard heads, falling back to head_dim.
+    """
+    name = _name_of(path)
+    rank = leaf.ndim
+    shape = tuple(leaf.shape)
+
+    def pad(*tails):
+        for tail in list(tails) + [[None] * rank]:
+            entries = [None] * (rank - len(tail)) + list(tail)
+            if _divisible(shape, entries, mesh):
+                return P(*entries)
+        return P(*([None] * rank))
+
+    sa = seq_axis  # 'data' axes when batch cannot shard, else None
+    if name == "idx":
+        return P(*([None] * rank))
+    if name in ("k", "v"):  # (reps?, B, L, KH, Dh)
+        return pad([b, sa, "model", None], [b, sa, None, "model"], [b, sa, None, None])
+    if name in ("ckv", "krope"):  # (reps?, B, L, r)
+        return pad([b, sa, None])
+    if name in ("conv_x",):  # (reps?, B, K-1, d_inner)
+        return pad([b, None, "model"])
+    if name in ("conv_bc",):
+        return pad([b, None, None])
+    if name == "ssm":  # (reps?, B, H, P, N)
+        return pad([b, "model", None, None], [b, None, "model", None], [b, None, None, "model"])
+    if name == "enc_out":  # (B, S_enc, d)
+        return pad([b, None, None])
+    return P(*([None] * rank))
+
+
+def cache_specs(cfg: ArchConfig, caches: Any, mesh: Mesh, batch_size: int = 0):
+    dp = data_axes(mesh)
+    dp_size = int(np.prod([_axis_size(mesh, a) for a in dp]))
+    b = dp if len(dp) > 1 else dp[0]
+    seq_axis = None
+    if batch_size and batch_size % max(dp_size, 1):
+        b, seq_axis = None, (dp if len(dp) > 1 else dp[0])
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _cache_leaf_spec(path, leaf, cfg, mesh, b, seq_axis),
+        caches,
+    )

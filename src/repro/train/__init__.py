@@ -1,0 +1,4 @@
+"""Training substrate: jitted train step, fault-tolerant trainer loop."""
+
+from .train_step import TrainConfig, make_train_step, init_train_state  # noqa: F401
+from .trainer import Trainer, TrainerConfig  # noqa: F401

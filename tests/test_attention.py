@@ -1,0 +1,170 @@
+"""Attention variants vs naive references: GQA, SWA masking, chunked == plain,
+MLA prefill/decode consistency, M-RoPE."""
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.configs.base import ArchConfig, AttnConfig
+from repro.models.attention import attention, attn_init, _sdpa_chunked
+from repro.models.layers import apply_rope
+
+
+def _base_cfg(**kw):
+    d = dict(
+        name="t", family="dense", n_layers=1, d_model=32, n_heads=4,
+        n_kv_heads=2, d_ff=64, vocab=64, head_dim=8, rope="standard",
+    )
+    d.update(kw)
+    return ArchConfig(**d)
+
+
+def _naive_attention(params, cfg, x, window=0):
+    """Direct O(S^2) reference with explicit per-head K/V replication."""
+    b, s, _ = x.shape
+    h, kh, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    q = (x @ params["wq"]).reshape(b, s, h, dh)
+    k = (x @ params["wk"]).reshape(b, s, kh, dh)
+    v = (x @ params["wv"]).reshape(b, s, kh, dh)
+    pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    if cfg.rope == "standard":
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k = apply_rope(k, pos, cfg.rope_theta)
+    k = jnp.repeat(k, h // kh, axis=2)
+    v = jnp.repeat(v, h // kh, axis=2)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k) / math.sqrt(dh)
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    if window:
+        qi, ki = jnp.mgrid[0:s, 0:s]
+        mask &= (qi - ki) < window
+    scores = jnp.where(mask[None, None], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", w, v).reshape(b, s, h * dh)
+    return out @ params["wo"]
+
+
+@pytest.mark.parametrize("kv_heads", [1, 2, 4])
+def test_gqa_matches_naive(kv_heads):
+    cfg = _base_cfg(n_kv_heads=kv_heads)
+    params = attn_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 24, cfg.d_model), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(24)[None], (2, 24))
+    got, _ = attention(params, cfg, x, positions=pos)
+    want = _naive_attention(params, cfg, x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+def test_swa_matches_naive_windowed():
+    cfg = _base_cfg(attn=AttnConfig(kind="swa", window=5))
+    params = attn_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 20, cfg.d_model), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(20)[None], (1, 20))
+    got, _ = attention(params, cfg, x, positions=pos)
+    want = _naive_attention(params, cfg, x, window=5)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+def test_chunked_matches_plain():
+    cfg = _base_cfg()
+    params = attn_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 64, cfg.d_model), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(64)[None], (2, 64))
+    plain, _ = attention(params, cfg, x, positions=pos, impl="plain")
+    chunked, _ = attention(params, cfg, x, positions=pos, impl="chunked")
+    np.testing.assert_allclose(
+        np.asarray(chunked), np.asarray(plain), rtol=2e-4, atol=2e-4
+    )
+
+
+def test_decode_stream_matches_full():
+    """prefill + token-by-token decode == full causal forward."""
+    cfg = _base_cfg()
+    params = attn_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    b, s, split = 2, 16, 9
+    x = jax.random.normal(jax.random.PRNGKey(1), (b, s, cfg.d_model), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    full, _ = attention(params, cfg, x, positions=pos)
+
+    cache = {
+        "k": jnp.zeros((b, s, cfg.n_kv_heads, cfg.head_dim_), jnp.float32),
+        "v": jnp.zeros((b, s, cfg.n_kv_heads, cfg.head_dim_), jnp.float32),
+        "idx": jnp.int32(0),
+    }
+    pre, cache = attention(params, cfg, x[:, :split], positions=pos[:, :split], cache=cache)
+    outs = [pre]
+    for t in range(split, s):
+        yt, cache = attention(
+            params, cfg, x[:, t : t + 1], positions=pos[:, t : t + 1], cache=cache
+        )
+        outs.append(yt)
+    got = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(full), rtol=2e-4, atol=2e-4)
+
+
+def test_swa_ring_cache_decode():
+    """Ring-buffered SWA cache: decode equals full SWA forward."""
+    w = 6
+    cfg = _base_cfg(attn=AttnConfig(kind="swa", window=w))
+    params = attn_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    b, s = 1, 25
+    x = jax.random.normal(jax.random.PRNGKey(1), (b, s, cfg.d_model), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    full, _ = attention(params, cfg, x, positions=pos)
+
+    cache = {
+        "k": jnp.zeros((b, w, cfg.n_kv_heads, cfg.head_dim_), jnp.float32),
+        "v": jnp.zeros((b, w, cfg.n_kv_heads, cfg.head_dim_), jnp.float32),
+        "idx": jnp.int32(0),
+    }
+    split = 13  # prefill longer than the window exercises the ring rollover
+    pre, cache = attention(params, cfg, x[:, :split], positions=pos[:, :split], cache=cache)
+    outs = [pre]
+    for t in range(split, s):
+        yt, cache = attention(
+            params, cfg, x[:, t : t + 1], positions=pos[:, t : t + 1], cache=cache
+        )
+        outs.append(yt)
+    got = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(full), rtol=2e-4, atol=2e-4)
+
+
+def test_mla_decode_matches_prefill_logits():
+    """Absorbed-matmul MLA decode == expanded MLA forward (last position)."""
+    cfg = get_arch("deepseek-v3-671b").reduced()
+    params = attn_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    b, s = 2, 12
+    x = jax.random.normal(jax.random.PRNGKey(1), (b, s, cfg.d_model), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    full, _ = attention(params, cfg, x, positions=pos)
+
+    cache = {
+        "ckv": jnp.zeros((b, s, cfg.attn.kv_lora_rank), jnp.float32),
+        "krope": jnp.zeros((b, s, cfg.attn.rope_head_dim), jnp.float32),
+        "idx": jnp.int32(0),
+    }
+    _, cache = attention(params, cfg, x[:, : s - 1], positions=pos[:, : s - 1], cache=cache)
+    last, cache = attention(
+        params, cfg, x[:, s - 1 :], positions=pos[:, s - 1 :], cache=cache
+    )
+    np.testing.assert_allclose(
+        np.asarray(last[:, 0]), np.asarray(full[:, -1]), rtol=5e-4, atol=5e-4
+    )
+
+
+def test_mrope_runs_and_differs_from_standard():
+    cfg = _base_cfg(rope="mrope", mrope_sections=(2, 1, 1))
+    params = attn_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    b, s = 1, 10
+    x = jax.random.normal(jax.random.PRNGKey(1), (b, s, cfg.d_model), jnp.float32)
+    p3 = jnp.broadcast_to(jnp.arange(s)[None, None], (b, 3, s)).astype(jnp.int32)
+    out, _ = attention(params, cfg, x, positions=p3)
+    assert out.shape == x.shape and np.all(np.isfinite(np.asarray(out)))
+    # diverging h/w ids must change the result
+    p3b = p3.at[:, 1].set(0)
+    out_b, _ = attention(params, cfg, x, positions=p3b)
+    assert not np.allclose(np.asarray(out), np.asarray(out_b))

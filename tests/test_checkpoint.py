@@ -1,0 +1,81 @@
+"""Checkpoint: atomic write, roundtrip, pruning, async, crash-consistency."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import (
+    AsyncCheckpointer,
+    latest_step,
+    restore_checkpoint,
+    save_checkpoint,
+)
+
+
+def _tree(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {
+        "a": jax.random.normal(k, (4, 8)),
+        "nested": {"b": jnp.arange(10, dtype=jnp.int32), "c": jnp.float32(3.5)},
+    }
+
+
+def test_roundtrip(tmp_path):
+    t = _tree()
+    save_checkpoint(str(tmp_path), 7, t, extra={"next_step": 7})
+    restored, step, extra = restore_checkpoint(str(tmp_path), t)
+    assert step == 7 and extra["next_step"] == 7
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_latest_and_multiple(tmp_path):
+    for s in (5, 10, 15):
+        save_checkpoint(str(tmp_path), s, _tree(s))
+    assert latest_step(str(tmp_path)) == 15
+    _, step, _ = restore_checkpoint(str(tmp_path), _tree(), step=10)
+    assert step == 10
+
+
+def test_tmp_dirs_are_invisible(tmp_path):
+    save_checkpoint(str(tmp_path), 1, _tree())
+    os.makedirs(tmp_path / "step_00000099.tmp")  # simulated dead write
+    assert latest_step(str(tmp_path)) == 1
+
+
+def test_structure_mismatch_raises(tmp_path):
+    save_checkpoint(str(tmp_path), 1, _tree())
+    with pytest.raises(ValueError):
+        restore_checkpoint(str(tmp_path), {"only": jnp.zeros(3)})
+
+
+def test_async_checkpointer_and_prune(tmp_path):
+    ck = AsyncCheckpointer(str(tmp_path), keep=2)
+    for s in (1, 2, 3, 4):
+        ck.save(s, _tree(s))
+    ck.wait()
+    steps = sorted(
+        int(n.split("_")[1]) for n in os.listdir(tmp_path) if n.startswith("step_")
+    )
+    assert steps == [3, 4]
+    restored, step, _ = restore_checkpoint(str(tmp_path), _tree())
+    assert step == 4
+    for a, b in zip(jax.tree.leaves(_tree(4)), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_restore_with_shardings(tmp_path):
+    t = _tree()
+    save_checkpoint(str(tmp_path), 3, t)
+    sh = jax.tree.map(
+        lambda _: jax.sharding.SingleDeviceSharding(jax.devices()[0]), t
+    )
+    restored, _, _ = restore_checkpoint(str(tmp_path), t, shardings=sh)
+    assert all(
+        leaf.sharding == jax.sharding.SingleDeviceSharding(jax.devices()[0])
+        for leaf in jax.tree.leaves(restored)
+        if hasattr(leaf, "sharding")
+    )

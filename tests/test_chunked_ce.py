@@ -1,0 +1,54 @@
+"""chunked_ce must equal plain full-logits CE (fwd and grad) -- it is a
+memory optimization, not an approximation."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.models import forward, forward_hidden, init_model
+from repro.models.model import chunked_ce, lm_loss, _head
+
+
+@pytest.mark.parametrize("n_chunks", [1, 2, 4, 7, 8])
+def test_chunked_matches_plain(n_chunks):
+    cfg = get_arch("internlm2-1.8b").reduced()
+    params = init_model(cfg, jax.random.PRNGKey(0))
+    b, s = 2, 32
+    batch = {
+        "tokens": jax.random.randint(jax.random.PRNGKey(1), (b, s), 0, cfg.vocab),
+    }
+    labels = jax.random.randint(jax.random.PRNGKey(2), (b, s), -1, cfg.vocab)
+    hidden, _, _ = forward_hidden(params, cfg, batch)
+    plain = lm_loss(_head(cfg, params, hidden), labels)
+    chunked = chunked_ce(cfg, params, hidden, labels, n_chunks)
+    np.testing.assert_allclose(float(chunked), float(plain), rtol=1e-6)
+
+
+def test_chunked_grads_match_plain():
+    cfg = get_arch("internlm2-1.8b").reduced()
+    params = init_model(cfg, jax.random.PRNGKey(0))
+    b, s = 2, 16
+    batch = {
+        "tokens": jax.random.randint(jax.random.PRNGKey(1), (b, s), 0, cfg.vocab)
+    }
+    labels = jnp.roll(batch["tokens"], -1, axis=1)
+
+    def loss(p, n):
+        h, _, _ = forward_hidden(p, cfg, batch)
+        return chunked_ce(cfg, p, h, labels, n)
+
+    g1 = jax.grad(lambda p: loss(p, 1))(params)
+    g4 = jax.grad(lambda p: loss(p, 4))(params)
+    for a, b_ in zip(jax.tree.leaves(g1), jax.tree.leaves(g4)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_), rtol=2e-4, atol=1e-6)
+
+
+def test_all_labels_masked_is_zero():
+    cfg = get_arch("internlm2-1.8b").reduced()
+    params = init_model(cfg, jax.random.PRNGKey(0))
+    batch = {"tokens": jnp.zeros((1, 8), jnp.int32)}
+    hidden, _, _ = forward_hidden(params, cfg, batch)
+    labels = jnp.full((1, 8), -1, jnp.int32)
+    assert float(chunked_ce(cfg, params, hidden, labels, 2)) == 0.0

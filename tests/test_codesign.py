@@ -1,0 +1,168 @@
+"""Codesign driver + solver + Pareto tests (paper §IV-§V)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (
+    GTX980,
+    MAXWELL,
+    MAXWELL_GPU,
+    STENCILS,
+    ProblemSize,
+    codesign,
+    enumerate_hw_space,
+    evaluate_fixed_hw,
+    pareto_mask,
+    refine_point,
+    solve_cell,
+    stencil_time,
+)
+from repro.core.codesign import HardwareSpace, STOCK
+from repro.core.solver import LATTICE_2D, TileLattice, decode_index
+from repro.core.workload import Workload, WorkloadCell, paper_sizes, paper_workload
+
+
+def tiny_hw():
+    n_sm = np.array([4.0, 16.0, 32.0])
+    n_v = np.array([64.0, 128.0, 256.0])
+    m_sm = np.array([48.0, 96.0, 192.0])
+    area = MAXWELL.area(n_sm, n_v, m_sm)
+    return HardwareSpace(n_sm, n_v, m_sm, area)
+
+
+TINY_LATTICE = TileLattice(t_s1=(2, 8), t_s2=(32, 128), t_t=(4, 16), k=(1, 4))
+
+
+def test_solve_cell_matches_bruteforce():
+    """The vectorized lattice solve equals a python-loop brute force."""
+    spec = STENCILS["jacobi2d"]
+    size = ProblemSize(4096, 4096, 1024)
+    hw = tiny_hw()
+    t, idx = solve_cell(spec, MAXWELL_GPU, size, hw.n_sm, hw.n_v, hw.m_sm, TINY_LATTICE)
+    g = TINY_LATTICE.grid()
+    for h in range(3):
+        times = [
+            float(
+                stencil_time(
+                    spec, MAXWELL_GPU, size, hw.n_sm[h], hw.n_v[h], hw.m_sm[h],
+                    g["t_s1"][j], g["t_s2"][j], g["t_t"][j], g["k"][j], g["t_s3"][j],
+                )
+            )
+            for j in range(TINY_LATTICE.size)
+        ]
+        assert t[h] == pytest.approx(min(times), rel=1e-12)
+
+
+def test_separability_equals_joint():
+    """Eq. (18): solving cells independently == joint minimization, because
+    the workload objective is a fixed positive combination of cell times."""
+    wl = paper_workload(["jacobi2d"])
+    cells = wl.cells[:3]
+    wl_small = Workload(
+        "t", tuple(WorkloadCell(c.stencil, c.size, 1 / 3) for c in cells)
+    )
+    hw = tiny_hw()
+    res = codesign(wl_small, hw=hw, lattice_2d=TINY_LATTICE)
+    # joint brute force: every combination of per-cell tile choices
+    g = TINY_LATTICE.grid()
+    for h in range(3):
+        per_cell_best = []
+        for c in wl_small.cells:
+            times = stencil_time(
+                c.stencil, MAXWELL_GPU, c.size,
+                hw.n_sm[h], hw.n_v[h], hw.m_sm[h],
+                g["t_s1"], g["t_s2"], g["t_t"], g["k"], g["t_s3"],
+            )
+            per_cell_best.append(times.min())
+        joint = sum(per_cell_best) / 3
+        assert res.weighted_time()[h] == pytest.approx(joint, rel=1e-12)
+
+
+def test_reweighting_for_free():
+    """§V.B: new frequencies re-reduce cached cell times (no re-solve)."""
+    wl = paper_workload(["jacobi2d", "heat2d"])
+    hw = tiny_hw()
+    res = codesign(wl, hw=hw, lattice_2d=TINY_LATTICE)
+    C = len(wl.cells)
+    one_hot = np.zeros(C)
+    one_hot[5] = 1.0
+    wt = res.weighted_time(one_hot)
+    assert wt == pytest.approx(res.cell_time[5], rel=1e-12)
+
+
+def test_stock_baseline_feasible():
+    wt, gf = evaluate_fixed_hw(paper_workload(["jacobi2d"]), STOCK["gtx980"])
+    assert np.isfinite(wt) and gf > 100  # stock GTX-980 runs jacobi fine
+
+
+def test_enumerate_respects_budget_and_alignment():
+    hw = enumerate_hw_space(max_area=450.0)
+    assert len(hw) > 0
+    assert np.all(hw.area <= 450.0)
+    assert np.all(hw.n_sm % 2 == 0)
+    assert np.all(hw.n_v % 32 == 0)
+    assert np.all((hw.m_sm % 48 == 0) | np.isin(hw.m_sm, (12, 24, 36)))
+
+
+def test_refine_never_worse():
+    spec = STENCILS["heat2d"]
+    size = ProblemSize(8192, 8192, 2048)
+    hw = (16.0, 128.0, 96.0)
+    t0, i = solve_cell(
+        spec, MAXWELL_GPU, size,
+        np.array([hw[0]]), np.array([hw[1]]), np.array([hw[2]]), LATTICE_2D,
+    )
+    sw0 = decode_index(LATTICE_2D, int(i[0]))
+    t1, sw1 = refine_point(spec, MAXWELL_GPU, size, hw, sw0)
+    assert t1 <= t0[0] * (1 + 1e-12)
+    assert np.isfinite(t1)
+
+
+# ---------------------------------------------------------------------------
+# Pareto properties
+# ---------------------------------------------------------------------------
+def test_pareto_no_dominated_point():
+    rng = np.random.default_rng(42)
+    cost = rng.uniform(100, 650, size=500)
+    perf = rng.uniform(100, 5000, size=500)
+    m = pareto_mask(cost, perf)
+    front_c, front_p = cost[m], perf[m]
+    for i in range(len(cost)):
+        dominated = np.any((front_c <= cost[i]) & (front_p > perf[i]))
+        if m[i]:
+            # a front point may not be dominated by another front point
+            dom_by_front = np.any(
+                (front_c <= cost[i]) & (front_p > perf[i])
+            )
+            assert not dom_by_front
+        else:
+            assert dominated or np.any((front_c <= cost[i]) & (front_p >= perf[i]))
+
+
+@settings(max_examples=100, deadline=None)
+@given(
+    st.lists(
+        st.tuples(
+            st.floats(1, 1e3, allow_nan=False), st.floats(1, 1e4, allow_nan=False)
+        ),
+        min_size=1,
+        max_size=60,
+    )
+)
+def test_pareto_front_is_monotone(points):
+    cost = np.array([p[0] for p in points])
+    perf = np.array([p[1] for p in points])
+    m = pareto_mask(cost, perf)
+    assert m.any()
+    idx = np.nonzero(m)[0]
+    order = np.argsort(cost[idx], kind="stable")
+    sorted_perf = perf[idx][order]
+    sorted_cost = cost[idx][order]
+    # strictly increasing performance along increasing cost
+    assert np.all(np.diff(sorted_perf) > 0) or len(idx) == 1
+    # some point achieving the global best performance is on the front
+    assert np.any(m & (perf == perf.max()))
+    # no duplicate costs on the front
+    assert len(np.unique(sorted_cost)) == len(sorted_cost)

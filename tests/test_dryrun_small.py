@@ -1,0 +1,57 @@
+"""Dry-run machinery end-to-end on 8 fake devices with reduced configs:
+lower + compile + cost/memory/collective analysis for single and multi-pod
+tiny meshes. (The full 512-device run is `python -m repro.launch.dryrun`.)"""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(arch, shape, mesh, outdir):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    env["REPRO_DRYRUN_DEVICES"] = "8"
+    proc = subprocess.run(
+        [
+            sys.executable, "-m", "repro.launch.dryrun", "--tiny",
+            "--arch", arch, "--shape", shape, "--mesh", mesh,
+            "--out", outdir, "--force",
+        ],
+        capture_output=True, text=True, env=env, cwd=ROOT, timeout=900,
+    )
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    path = os.path.join(outdir, mesh, f"{arch}__{shape}.json")
+    with open(path) as f:
+        return json.load(f)
+
+
+@pytest.mark.parametrize("mesh", ["single", "multi"])
+def test_train_cell_compiles_and_accounts(tmp_path, mesh):
+    rec = _run("internlm2-1.8b", "train_4k", mesh, str(tmp_path))
+    assert not rec.get("skipped") and "error" not in rec
+    assert rec["flops"] > 0
+    assert rec["dot_flops_expanded"] > rec["flops"] * 0.5
+    assert rec["collective_bytes"] > 0  # DP/TP collectives must exist
+    assert "all-reduce" in rec["collectives"]
+    assert rec["memory"]["temp_size_in_bytes"] > 0
+
+
+def test_decode_cell_compiles(tmp_path):
+    rec = _run("mixtral-8x22b", "decode_32k", "single", str(tmp_path))
+    assert not rec.get("skipped") and "error" not in rec
+    assert rec["flops"] > 0
+
+
+def test_ssm_long_context_runs(tmp_path):
+    rec = _run("mamba2-780m", "long_500k", "single", str(tmp_path))
+    assert not rec.get("skipped") and "error" not in rec
+
+
+def test_full_attention_long_context_skips(tmp_path):
+    rec = _run("llama3-8b", "long_500k", "single", str(tmp_path))
+    assert rec["skipped"] and "quadratic" in rec["reason"]

@@ -1,0 +1,126 @@
+"""Per-kernel allclose vs the pure-jnp oracle: shape/dtype sweeps +
+hypothesis property tests. Kernels run in interpret mode on CPU (TPU is the
+compile target; interpret executes the same kernel body)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.kernels.ops import KERNELS, kernel_flops, stencil_run, stencil_step
+from repro.kernels.ref import run_ref
+from repro.kernels.stencil_common import plan_block_rows
+
+NAMES_2D = ["jacobi2d", "heat2d", "laplacian2d", "gradient2d"]
+NAMES_3D = ["heat3d", "laplacian3d"]
+
+SHAPES_2D = [(8, 130), (16, 128), (33, 257), (64, 64), (128, 384), (5, 7)]
+SHAPES_3D = [(8, 16, 130), (12, 12, 12), (17, 9, 33), (32, 16, 128)]
+
+
+def _rand(shape, dtype, seed=0):
+    x = jax.random.normal(jax.random.PRNGKey(seed), shape, dtype=jnp.float32)
+    return x.astype(dtype)
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else dict(rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("name", NAMES_2D)
+@pytest.mark.parametrize("shape", SHAPES_2D)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_2d_kernels_match_oracle(name, shape, dtype):
+    x = _rand(shape, dtype)
+    got = stencil_step(name, x, interpret=True)
+    want = run_ref(name, x)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), **_tol(dtype)
+    )
+
+
+@pytest.mark.parametrize("name", NAMES_3D)
+@pytest.mark.parametrize("shape", SHAPES_3D)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_3d_kernels_match_oracle(name, shape, dtype):
+    x = _rand(shape, dtype)
+    got = stencil_step(name, x, interpret=True)
+    want = run_ref(name, x)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), **_tol(dtype)
+    )
+
+
+@pytest.mark.parametrize("name", ["jacobi2d", "heat3d"])
+@pytest.mark.parametrize("block_rows", [1, 2, 3, 5, 8, 64])
+def test_block_size_invariance(name, block_rows):
+    """Property: the tiling is semantics-preserving for any band height."""
+    shape = (19, 33) if KERNELS[name].DIMS == 2 else (11, 9, 17)
+    x = _rand(shape, jnp.float32, seed=3)
+    got = stencil_step(name, x, block_rows=block_rows, interpret=True)
+    want = run_ref(name, x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("name", list(KERNELS))
+def test_multi_step_run(name):
+    shape = (24, 40) if KERNELS[name].DIMS == 2 else (10, 12, 14)
+    x = _rand(shape, jnp.float32, seed=1)
+    got = stencil_run(name, x, steps=4, interpret=True)
+    want = run_ref(name, x, steps=4)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-5)
+    assert not np.any(np.isnan(np.asarray(got)))
+
+
+def test_borders_are_dirichlet():
+    x = _rand((16, 24), jnp.float32, seed=2)
+    y = stencil_step("jacobi2d", x, interpret=True)
+    np.testing.assert_array_equal(np.asarray(y[0]), np.asarray(x[0]))
+    np.testing.assert_array_equal(np.asarray(y[-1]), np.asarray(x[-1]))
+    np.testing.assert_array_equal(np.asarray(y[:, 0]), np.asarray(x[:, 0]))
+    np.testing.assert_array_equal(np.asarray(y[:, -1]), np.asarray(x[:, -1]))
+
+
+def test_plan_block_rows_fits_budget():
+    rows = plan_block_rows((4096, 4096), jnp.float32, vmem_bytes=8 << 20)
+    assert rows >= 1
+    assert (4 * rows + 2) * 4096 * 4 <= (8 << 20)
+    # small arrays: whole array in one band
+    assert plan_block_rows((8, 16), jnp.float32) == 8
+
+
+def test_kernel_flops_counts_interior():
+    assert kernel_flops("jacobi2d", (10, 10), steps=2) == 5.0 * 8 * 8 * 2
+    assert kernel_flops("heat3d", (4, 4, 4)) == 15.0 * 2 * 2 * 2
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    name=st.sampled_from(NAMES_2D),
+    rows=st.integers(3, 40),
+    cols=st.integers(3, 70),
+    block_rows=st.integers(1, 16),
+    seed=st.integers(0, 10),
+)
+def test_property_2d_allclose(name, rows, cols, block_rows, seed):
+    x = _rand((rows, cols), jnp.float32, seed=seed)
+    got = stencil_step(name, x, block_rows=block_rows, interpret=True)
+    want = run_ref(name, x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    name=st.sampled_from(NAMES_3D),
+    d=st.integers(3, 12),
+    h=st.integers(3, 12),
+    w=st.integers(3, 20),
+    block_rows=st.integers(1, 6),
+)
+def test_property_3d_allclose(name, d, h, w, block_rows):
+    x = _rand((d, h, w), jnp.float32, seed=d * h + w)
+    got = stencil_step(name, x, block_rows=block_rows, interpret=True)
+    want = run_ref(name, x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-6)

@@ -1,0 +1,67 @@
+"""TPU codesign bridge: the analytic LM roofline + eq.-18 mesh optimizer."""
+
+import numpy as np
+import pytest
+
+from repro.configs.base import SHAPES, get_arch
+from repro.core.lmtime import HW, MeshPlan, lm_roofline
+from repro.core.meshopt import enumerate_plans, optimize, pareto_plans
+from repro.models.model import active_params, count_params
+
+
+def _cell(arch, shape):
+    cfg = get_arch(arch)
+    return cfg, SHAPES[shape], count_params(cfg), active_params(cfg)
+
+
+def test_roofline_terms_positive_and_bounded():
+    cfg, shape, n, na = _cell("llama3-8b", "train_4k")
+    r = lm_roofline(cfg, shape, MeshPlan(1, 16, 16, 8, "full", False), n, na)
+    assert r["compute_s"] > 0 and r["memory_s"] > 0 and r["collective_s"] > 0
+    # compute term must be >= ideal 6ND/peak (recompute only adds)
+    ideal = 6 * na * shape.tokens / (256 * HW["peak_flops_bf16"])
+    assert r["compute_s"] >= ideal * 0.99
+
+
+def test_fsdp_required_for_huge_models():
+    """deepseek at TP-16 without FSDP cannot fit HBM; with FSDP it must."""
+    cfg, shape, n, na = _cell("deepseek-v3-671b", "train_4k")
+    no = lm_roofline(cfg, shape, MeshPlan(1, 16, 16, 32, "full", False), n, na)
+    yes = lm_roofline(cfg, shape, MeshPlan(1, 16, 16, 32, "full", True), n, na)
+    assert not no["fits"]
+    assert yes["hbm_bytes"] < no["hbm_bytes"]
+
+
+def test_compression_reduces_collective_term():
+    cfg, shape, n, na = _cell("llama3-8b", "train_4k")
+    plain = lm_roofline(cfg, shape, MeshPlan(2, 8, 16, 8, "full", False, False), n, na)
+    comp = lm_roofline(cfg, shape, MeshPlan(2, 8, 16, 8, "full", False, True), n, na)
+    assert comp["collective_s"] < plain["collective_s"]
+
+
+def test_optimize_returns_feasible_sorted():
+    cfg, shape, n, na = _cell("llama3-8b", "train_4k")
+    plans = optimize(cfg, shape, n, na, chips=256, top_k=8)
+    assert plans, "llama3 train must have feasible plans at 256 chips"
+    bounds = [p["bound_s"] for p in plans]
+    assert bounds == sorted(bounds)
+    for p in plans:
+        assert p["fits"]
+        mp = p["plan"]
+        assert mp["pod"] * mp["data"] * mp["model"] == 256
+
+
+def test_enumerate_respects_multipod():
+    plans = enumerate_plans(512, multi_pod=True, train=False)
+    assert all(p.pod == 2 for p in plans)
+    assert all(p.chips == 512 for p in plans)
+
+
+def test_pareto_plans_monotone():
+    cfg, shape, n, na = _cell("internlm2-1.8b", "train_4k")
+    all_results = []
+    for chips in (64, 128, 256):
+        all_results += optimize(cfg, shape, n, na, chips=chips, top_k=3)
+    front = pareto_plans(all_results)
+    bounds = [r["bound_s"] for r in front]
+    assert bounds == sorted(bounds, reverse=True)  # more chips -> faster

@@ -1,0 +1,134 @@
+"""Sharding rules: validity (divisibility), fallbacks, FSDP/ZeRO layering."""
+
+import jax
+import numpy as np
+import pytest
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCHS, get_arch
+from repro.models.model import init_model
+from repro.serve.kvcache import init_caches
+from repro.sharding.partition import (
+    batch_specs,
+    cache_specs,
+    opt_state_specs,
+    param_specs,
+)
+
+get_arch("llama3-8b")
+ALL = sorted(ARCHS)
+
+
+def _fake_mesh(shape=(2, 2), axes=("data", "model")):
+    """An abstract mesh (device objects only needed for NamedSharding)."""
+    n = int(np.prod(shape))
+    devs = np.array([jax.devices()[0]] * n).reshape(shape)
+
+    class _M:
+        axis_names = axes
+        devices = devs
+
+    return _M()
+
+
+def _axis_sizes(mesh):
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def _check_divisible(tree_specs, tree_shapes, mesh):
+    sizes = _axis_sizes(mesh)
+    leaves_spec = jax.tree.leaves(tree_specs, is_leaf=lambda x: isinstance(x, P))
+    leaves_shape = jax.tree.leaves(tree_shapes)
+    assert len(leaves_spec) == len(leaves_shape)
+    for spec, leaf in zip(leaves_spec, leaves_shape):
+        shape = leaf.shape
+        for dim, entry in zip(shape, tuple(spec) + (None,) * len(shape)):
+            if entry is None:
+                continue
+            axes = entry if isinstance(entry, tuple) else (entry,)
+            total = int(np.prod([sizes.get(a, 1) for a in axes]))
+            assert dim % total == 0, (spec, shape)
+            # no duplicate axis use within one spec
+        used = [a for e in spec if e is not None for a in (e if isinstance(e, tuple) else (e,))]
+        assert len(used) == len(set(used)), spec
+
+
+@pytest.mark.parametrize("arch", ALL)
+@pytest.mark.parametrize("fsdp", [False, True])
+def test_full_config_param_specs_are_valid(arch, fsdp):
+    """FULL configs x production-mesh axis sizes: every spec divides."""
+    cfg = ARCHS[arch]
+    mesh = _fake_mesh((16, 16), ("data", "model"))
+    shapes = jax.eval_shape(lambda: init_model(cfg, jax.random.PRNGKey(0)))
+    specs = param_specs(cfg, shapes, mesh, fsdp=fsdp)
+    _check_divisible(specs, shapes, mesh)
+    o_specs = opt_state_specs(cfg, shapes, mesh, fsdp=fsdp)
+    _check_divisible(o_specs, shapes, mesh)
+
+
+@pytest.mark.parametrize("arch", ALL)
+def test_multipod_param_specs_are_valid(arch):
+    cfg = ARCHS[arch]
+    mesh = _fake_mesh((2, 16, 16), ("pod", "data", "model"))
+    shapes = jax.eval_shape(lambda: init_model(cfg, jax.random.PRNGKey(0)))
+    specs = param_specs(cfg, shapes, mesh, fsdp=True)
+    _check_divisible(specs, shapes, mesh)
+
+
+def test_whisper_odd_vocab_falls_back():
+    """51865 doesn't divide 16: the embedding shards d_model instead."""
+    cfg = get_arch("whisper-medium")
+    mesh = _fake_mesh((16, 16), ("data", "model"))
+    shapes = jax.eval_shape(lambda: init_model(cfg, jax.random.PRNGKey(0)))
+    specs = param_specs(cfg, shapes, mesh)
+    assert specs["embed"] == P(None, "model")
+
+
+def test_llama_vocab_shards():
+    cfg = get_arch("llama3-8b")
+    mesh = _fake_mesh((16, 16), ("data", "model"))
+    shapes = jax.eval_shape(lambda: init_model(cfg, jax.random.PRNGKey(0)))
+    specs = param_specs(cfg, shapes, mesh)
+    assert specs["embed"] == P("model", None)
+
+
+def test_expert_parallel_vs_tp_within():
+    mesh = _fake_mesh((16, 16), ("data", "model"))
+    # deepseek: 256 experts % 16 == 0 -> EP on the expert dim
+    ds = get_arch("deepseek-v3-671b")
+    shapes = jax.eval_shape(lambda: init_model(ds, jax.random.PRNGKey(0)))
+    specs = param_specs(ds, shapes, mesh)
+    seg1 = specs["stack"]["seg1"][0]["ffn"]["experts"]["up"]
+    assert tuple(seg1)[-3] == "model"
+    # mixtral: 8 experts % 16 != 0 -> TP within experts (hidden dim)
+    mx = get_arch("mixtral-8x22b")
+    shapes = jax.eval_shape(lambda: init_model(mx, jax.random.PRNGKey(0)))
+    specs = param_specs(mx, shapes, mesh)
+    up = specs["stack"]["seg0"][0]["ffn"]["experts"]["up"]
+    assert tuple(up)[-1] == "model"
+
+
+def test_cache_specs_long_context_fallback():
+    """B=1 cannot shard over data: the cache length dim takes it instead."""
+    cfg = get_arch("jamba-v0.1-52b")
+    mesh = _fake_mesh((16, 16), ("data", "model"))
+    caches = jax.eval_shape(lambda: init_caches(cfg, 1, 2048, dtype="bfloat16"))
+    specs = cache_specs(cfg, caches, mesh, batch_size=1)
+    k_spec = None
+    for si, slots in specs["stack"].items():
+        for slot in slots:
+            if "k" in slot.get("mixer", {}):
+                k_spec = slot["mixer"]["k"]
+    assert k_spec is not None
+    assert "data" in tuple(k_spec)  # length dim sharded over data
+    _check_divisible(
+        specs, jax.eval_shape(lambda: init_caches(cfg, 1, 2048, dtype="bfloat16")), mesh
+    )
+
+
+def test_batch_specs_replicate_tiny_batch():
+    cfg = get_arch("llama3-8b")
+    mesh = _fake_mesh((16, 16), ("data", "model"))
+    assert batch_specs(cfg, mesh, batch_size=256)["tokens"] == P("data", None)
+    assert batch_specs(cfg, mesh, batch_size=1)["tokens"] == P(None, None)
