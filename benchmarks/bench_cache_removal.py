@@ -9,7 +9,7 @@ from repro.core import GTX980, MAXWELL, TITAN_X, cacheless, codesign, enumerate_
 from repro.core.codesign import evaluate_fixed_hw
 from repro.core.workload import paper_workload
 
-from .common import cache_json, emit
+from .common import SMOKE_HW_STRIDE, STENCIL_CLASSES, cache_json, emit, skey, smoke
 
 #: §V.A reported numbers for the derived column
 PAPER = {
@@ -21,10 +21,9 @@ PAPER = {
 def _solve() -> dict:
     out = {}
     hw = enumerate_hw_space(MAXWELL, max_area=650.0)
-    for cls, names in (
-        ("2d", ["jacobi2d", "heat2d", "laplacian2d", "gradient2d"]),
-        ("3d", ["heat3d", "laplacian3d"]),
-    ):
+    if smoke():
+        hw = hw.downsample(SMOKE_HW_STRIDE)
+    for cls, names in STENCIL_CLASSES.items():
         wl = paper_workload(names)
         t0 = time.perf_counter()
         res = codesign(wl, hw=hw)
@@ -44,7 +43,7 @@ def _solve() -> dict:
 
 
 def run() -> None:
-    table = cache_json("cache_removal", _solve)
+    table = cache_json(skey("cache_removal"), _solve)
     for key, r in table.items():
         cls, gpu = key.split("_")
         emit(

@@ -11,15 +11,17 @@ import numpy as np
 from repro.kernels.ops import KERNELS, kernel_flops, stencil_run, tuned_block_rows
 from repro.kernels.ref import run_ref
 
-from .common import emit, timed
+from .common import emit, smoke, timed
 
 SHAPES = {2: (256, 256), 3: (32, 64, 64)}
+SMOKE_SHAPES = {2: (64, 64), 3: (16, 32, 32)}
 STEPS = 2
 
 
 def run() -> None:
+    shapes = SMOKE_SHAPES if smoke() else SHAPES
     for name, mod in KERNELS.items():
-        shape = SHAPES[mod.DIMS]
+        shape = shapes[mod.DIMS]
         x = jax.random.normal(jax.random.PRNGKey(0), shape, jnp.float32)
         br = tuned_block_rows(name, shape, jnp.float32)
 

@@ -10,7 +10,7 @@ from repro.configs.base import SHAPES, get_arch
 from repro.core.meshopt import optimize
 from repro.models.model import active_params, count_params
 
-from .common import emit
+from .common import emit, smoke
 
 CELLS = [
     ("llama3-8b", "train_4k"),
@@ -20,7 +20,8 @@ CELLS = [
 
 
 def run() -> None:
-    for arch, shape_name in CELLS:
+    cells = CELLS[:1] if smoke() else CELLS
+    for arch, shape_name in cells:
         cfg = get_arch(arch)
         shape = SHAPES[shape_name]
         t0 = time.perf_counter()

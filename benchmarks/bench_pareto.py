@@ -12,12 +12,7 @@ from repro.core.codesign import evaluate_fixed_hw
 from repro.core.pareto import pareto_mask
 from repro.core.workload import paper_workload
 
-from .common import cache_json, emit
-
-CLASSES = {
-    "2d": ["jacobi2d", "heat2d", "laplacian2d", "gradient2d"],
-    "3d": ["heat3d", "laplacian3d"],
-}
+from .common import SMOKE_HW_STRIDE, STENCIL_CLASSES as CLASSES, cache_json, emit, skey, smoke
 # paper-reported improvements for the same comparisons (for the derived col)
 PAPER = {
     ("2d", "gtx980"): 104.0,
@@ -30,8 +25,10 @@ PAPER = {
 def _solve(cls: str) -> dict:
     wl = paper_workload(CLASSES[cls], name=f"paper-{cls}")
     hw = enumerate_hw_space(MAXWELL, max_area=650.0)
+    if smoke():
+        hw = hw.downsample(SMOKE_HW_STRIDE)
     t0 = time.perf_counter()
-    res = codesign(wl, hw=hw)
+    res = codesign(wl, hw=hw)  # engine="auto": compiled sweep when available
     solve_s = time.perf_counter() - t0
     g = res.gflops()
     mask = pareto_mask(hw.area, g)
@@ -58,7 +55,7 @@ def _solve(cls: str) -> dict:
 
 def run() -> None:
     for cls in CLASSES:
-        r = cache_json(f"pareto_{cls}", lambda cls=cls: _solve(cls))
+        r = cache_json(skey(f"pareto_{cls}"), lambda cls=cls: _solve(cls))
         us = r["solve_s"] * 1e6
         emit(
             f"pareto_{cls}_designs", us,

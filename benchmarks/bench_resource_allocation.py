@@ -13,13 +13,13 @@ import numpy as np
 from repro.core import MAXWELL, HardwarePoint
 from repro.core.pareto import pareto_mask
 
-from .common import ARTIFACTS, emit
+from .common import ARTIFACTS, STENCIL_CLASSES, emit, skey
 
 
 def run() -> None:
     # reuse the Fig.-3 artifacts (bench_pareto must run first in the suite)
-    for cls in ("2d", "3d"):
-        path = os.path.join(ARTIFACTS, f"pareto_{cls}.json")
+    for cls in STENCIL_CLASSES:
+        path = os.path.join(ARTIFACTS, skey(f"pareto_{cls}") + ".json")
         if not os.path.exists(path):
             emit(f"resource_alloc_{cls}", 0.0, "skipped (run bench_pareto first)")
             continue

@@ -11,7 +11,7 @@ import numpy as np
 from repro.core import MAXWELL, codesign, enumerate_hw_space
 from repro.core.workload import paper_workload
 
-from .common import cache_json, emit
+from .common import SMOKE_HW_STRIDE, STENCIL_CLASSES, cache_json, emit, skey, smoke
 
 #: paper Table II rows (n_SM, n_V, M_SM, area, GFLOP/s) for the derived col
 PAPER_TABLE = {
@@ -27,11 +27,12 @@ PAPER_TABLE = {
 def _solve() -> dict:
     out = {}
     hw = enumerate_hw_space(MAXWELL, max_area=650.0)
-    for cls in (["jacobi2d", "heat2d", "laplacian2d", "gradient2d"],
-                ["heat3d", "laplacian3d"]):
+    if smoke():
+        hw = hw.downsample(SMOKE_HW_STRIDE)
+    for cls in STENCIL_CLASSES.values():
         wl = paper_workload(cls)
         t0 = time.perf_counter()
-        res = codesign(wl, hw=hw)
+        res = codesign(wl, hw=hw)  # engine="auto": compiled sweep
         solve_s = time.perf_counter() - t0
         cells = list(wl.cells)
         for name in cls:
@@ -51,7 +52,7 @@ def _solve() -> dict:
 
 
 def run() -> None:
-    table = cache_json("sensitivity", _solve)
+    table = cache_json(skey("sensitivity"), _solve)
     for name, r in table.items():
         ps = PAPER_TABLE[name]
         emit(

@@ -1,0 +1,71 @@
+"""NumPy chunked sweep vs compiled JAX sweep engine on the Fig.-3 workload.
+
+Times the full eq.-(18) solve (every workload cell x every feasible
+hardware point) once per engine and reports the wall-time ratio, plus a
+cell-by-cell argmin equivalence check so the speedup is never bought with
+a wrong answer. The JAX number includes compilation (cold start); a warm
+second pass is reported separately to show the steady-state gap.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import MAXWELL, codesign, enumerate_hw_space
+from repro.core import sweep
+from repro.core.workload import paper_workload
+
+from .common import SMOKE_HW_STRIDE, STENCIL_CLASSES as CLASSES, emit, smoke
+
+
+def _equivalent(res_np, res_jax) -> float:
+    """Max relative gap between the engines' per-cell optima (the argmins
+    may differ on exact ties; the achieved times must agree)."""
+    finite = np.isfinite(res_np.cell_time)
+    if not np.array_equal(finite, np.isfinite(res_jax.cell_time)):
+        return float("inf")
+    gap = np.abs(res_jax.cell_time[finite] - res_np.cell_time[finite])
+    return float(np.max(gap / res_np.cell_time[finite]))
+
+
+def run() -> None:
+    if not sweep.HAVE_JAX:
+        emit("sweep_engine", 0.0, "skipped (jax not installed)")
+        return
+    hw = enumerate_hw_space(MAXWELL, max_area=650.0)
+    if smoke():
+        hw = hw.downsample(SMOKE_HW_STRIDE)
+    total_np = total_jax = 0.0
+    for cls, names in CLASSES.items():
+        wl = paper_workload(names, name=f"sweep-{cls}")
+        sweep.clear_caches()  # honest cold start: compile time is charged
+
+        t0 = time.perf_counter()
+        res_jax = codesign(wl, hw=hw, engine="jax")
+        t_cold = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        codesign(wl, hw=hw, engine="jax")
+        t_warm = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        res_np = codesign(wl, hw=hw, engine="numpy")
+        t_np = time.perf_counter() - t0
+
+        gap = _equivalent(res_np, res_jax)
+        total_np += t_np
+        total_jax += t_cold
+        emit(
+            f"sweep_{cls}", t_cold * 1e6,
+            f"{len(wl.cells)} cells x {len(hw)} hw: numpy {t_np:.1f}s, "
+            f"jax cold {t_cold:.1f}s ({t_np/t_cold:.1f}x) / warm {t_warm:.1f}s "
+            f"({t_np/t_warm:.1f}x); max argmin gap {gap:.1e}",
+        )
+        assert gap < 1e-5, f"engines diverged on {cls}: {gap}"
+    emit(
+        "sweep_total", total_jax * 1e6,
+        f"numpy {total_np:.1f}s vs jax {total_jax:.1f}s cold incl. compile "
+        f"-> {total_np/total_jax:.1f}x",
+    )

@@ -4,21 +4,53 @@ Prints ``name,us_per_call,derived`` CSV lines (harness contract).
 
   bench_area                -- SIII.B-C  area calibration + validation
   bench_pareto              -- Fig. 3    design space + Pareto fronts
+  bench_sweep               -- engine    NumPy vs compiled JAX sweep
   bench_sensitivity         -- Table II  per-stencil optimal architectures
   bench_cache_removal       -- SV.A      cache-less comparison
   bench_resource_allocation -- Fig. 4    area-fraction clustering
   bench_kernels             -- workload  Pallas stencil kernels vs oracle
   bench_meshopt             -- beyond-paper: TPU mesh codesign (eq. 18)
   bench_roofline            -- SRoofline summary from dry-run artifacts
+
+``--smoke`` runs every suite on tiny problem sizes / downsampled hardware
+spaces (separate artifact cache), sized for a CI lane: the point is that
+every code path executes, not that the numbers are publication-grade.
 """
 
 from __future__ import annotations
 
+import argparse
+import os
 import sys
 import traceback
 
 
+SUITE_NAMES = [
+    "area", "pareto", "sweep", "sensitivity", "cache_removal",
+    "resource_allocation", "kernels", "meshopt", "roofline",
+]
+
+
 def main() -> None:
+    ap = argparse.ArgumentParser(
+        description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter,
+    )
+    ap.add_argument(
+        "only", nargs="?", default=None, choices=SUITE_NAMES,
+        help="run a single suite",
+    )
+    ap.add_argument(
+        "--smoke",
+        action="store_true",
+        help="tiny CI-runnable sizes (downsampled hw space, small kernels)",
+    )
+    args = ap.parse_args()
+    if args.smoke:
+        # env (not a global) so suite modules can check common.smoke()
+        # regardless of import order
+        os.environ["REPRO_BENCH_SMOKE"] = "1"
+
     from . import (
         bench_area,
         bench_cache_removal,
@@ -28,23 +60,30 @@ def main() -> None:
         bench_resource_allocation,
         bench_roofline,
         bench_sensitivity,
+        bench_sweep,
     )
 
-    suites = [
-        ("area", bench_area),
-        ("pareto", bench_pareto),
-        ("sensitivity", bench_sensitivity),
-        ("cache_removal", bench_cache_removal),
-        ("resource_allocation", bench_resource_allocation),
-        ("kernels", bench_kernels),
-        ("meshopt", bench_meshopt),
-        ("roofline", bench_roofline),
-    ]
-    only = sys.argv[1] if len(sys.argv) > 1 else None
+    suites = list(
+        zip(
+            SUITE_NAMES,
+            [
+                bench_area,
+                bench_pareto,
+                bench_sweep,
+                bench_sensitivity,
+                bench_cache_removal,
+                bench_resource_allocation,
+                bench_kernels,
+                bench_meshopt,
+                bench_roofline,
+            ],
+            strict=True,  # a skewed registry must be a hard error
+        )
+    )
     failed = []
     print("name,us_per_call,derived")
     for name, mod in suites:
-        if only and only != name:
+        if args.only and args.only != name:
             continue
         try:
             mod.run()

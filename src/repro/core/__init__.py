@@ -19,6 +19,18 @@ from .codesign import (  # noqa: F401
 )
 from .pareto import pareto_front, pareto_mask  # noqa: F401
 from .solver import LATTICE_2D, LATTICE_3D, TileLattice, refine_point, solve_cell  # noqa: F401
+
+# .sweep imports jax at module scope (~1s); load it lazily (PEP 562) so the
+# pure-NumPy oracle/area paths keep the seed's cheap `import repro.core`.
+_SWEEP_EXPORTS = ("HAVE_JAX", "refine_points", "sweep_cell")
+
+
+def __getattr__(name):
+    if name in _SWEEP_EXPORTS:
+        from . import sweep
+
+        return getattr(sweep, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 from .timemodel import (  # noqa: F401
     MAXWELL_GPU,
     STENCILS,

@@ -6,6 +6,15 @@ minimization per (stencil, size) cell. Because the per-cell optima are
 cached as a ``(cells x hardware)`` matrix, the §V.B "workload sensitivity
 for free" analyses (re-weighting frequencies, single-stencil workloads)
 are simple matrix re-reductions -- no re-solving.
+
+The inner solves run on one of two engines:
+
+* ``"jax"`` -- the compiled sweep of :mod:`repro.core.sweep` (jitted vmap
+  over hardware x tile lattice; CPU/GPU/TPU); the default whenever jax is
+  importable and the hardware space is big enough to amortize compilation;
+* ``"numpy"`` -- the seed's chunked-broadcast reference solver
+  (:func:`repro.core.solver.solve_cell`), kept bit-exact as the oracle the
+  jax engine is equivalence-tested against.
 """
 
 from __future__ import annotations
@@ -18,7 +27,7 @@ import numpy as np
 from .area import GTX980, TITAN_X, HardwarePoint, LinearAreaModel, MAXWELL
 from .pareto import pareto_mask
 from .solver import LATTICE_2D, LATTICE_3D, TileLattice, decode_index, solve_cell
-from .timemodel import GPUSpec, MAXWELL_GPU, stencil_time
+from .timemodel import GPUSpec, MAXWELL_GPU, ProblemSize, stencil_time
 from .workload import Workload
 
 __all__ = [
@@ -51,6 +60,13 @@ class HardwareSpace:
     def point(self, i: int) -> HardwarePoint:
         return HardwarePoint(
             n_sm=int(self.n_sm[i]), n_v=int(self.n_v[i]), m_sm=float(self.m_sm[i])
+        )
+
+    def downsample(self, step: int) -> "HardwareSpace":
+        """Every ``step``-th point -- quick demos / smoke benchmarks."""
+        keep = np.arange(len(self)) % step == 0
+        return HardwareSpace(
+            self.n_sm[keep], self.n_v[keep], self.m_sm[keep], self.area[keep]
         )
 
 
@@ -125,6 +141,106 @@ class CodesignResult:
             raise ValueError("infeasible cell/hw combination")
         return decode_index(self.lattices[cell_index], idx)
 
+    def refine(
+        self, hw_index: int
+    ) -> Tuple[np.ndarray, List[Optional[Dict[str, int]]]]:
+        """Polish every cell's lattice optimum at one reported hardware
+        point with the batched coordinate descent of
+        :func:`repro.core.sweep.refine_points` (all cells of a stencil
+        descend together in one compiled call per round, instead of the
+        seed's per-point Python loops).
+
+        Returns ``(times (C,), tile dicts)``; a cell that is infeasible at
+        this hardware point keeps its +inf time and gets ``None`` tiles
+        (there is no valid configuration to report).
+        """
+        from . import sweep
+
+        times = self.cell_time[:, hw_index].copy()
+        tiles: List[Optional[Dict[str, int]]] = [None] * len(times)
+        point = self.hw.point(hw_index)
+        hw_row = (float(point.n_sm), float(point.n_v), float(point.m_sm))
+        groups: Dict[str, List[int]] = {}
+        for ci, cell in enumerate(self.workload.cells):
+            if self.cell_tile_idx[ci, hw_index] >= 0:
+                groups.setdefault(cell.stencil.name, []).append(ci)
+        for name, cis in groups.items():
+            st = self.workload.cells[cis[0]].stencil
+            sizes = np.array(
+                [
+                    (c.size.s1, c.size.s2, c.size.s3, c.size.t)
+                    for c in (self.workload.cells[ci] for ci in cis)
+                ],
+                np.float64,
+            )
+            start = {ci: self.tiles_for(ci, hw_index) for ci in cis}
+            sw0 = np.array(
+                [[start[ci][k] for k in sweep.SW_NAMES] for ci in cis],
+                np.float64,
+            )
+            if sweep.HAVE_JAX:
+                _, sw_ref = sweep.refine_points(
+                    st, self.gpu, sizes, np.tile(hw_row, (len(cis), 1)), sw0
+                )
+            else:  # seed fallback: sequential scans
+                from .solver import refine_point
+
+                sw_ref = np.empty_like(sw0)
+                for j, ci in enumerate(cis):
+                    _, swd = refine_point(
+                        st, self.gpu, self.workload.cells[ci].size, hw_row,
+                        dict(start[ci]),
+                    )
+                    sw_ref[j] = [swd[k] for k in sweep.SW_NAMES]
+            # re-evaluate BOTH candidates in the float64 oracle model:
+            # acceptance must never be decided by float32 evaluation noise,
+            # and reported times must reproduce at the reported tiles
+            # regardless of which engine produced the lattice optimum.
+            size64 = ProblemSize(
+                s1=sizes[:, 0], s2=sizes[:, 1], t=sizes[:, 3], s3=sizes[:, 2]
+            )
+
+            def t64(sw):
+                return stencil_time(
+                    st, self.gpu, size64, hw_row[0], hw_row[1], hw_row[2],
+                    sw[:, 0], sw[:, 1], sw[:, 2], sw[:, 3], sw[:, 4],
+                )
+
+            t_ref, t_start = t64(sw_ref), t64(sw0)
+            for j, ci in enumerate(cis):
+                # keep the lattice optimum unless the descent improved it
+                if t_ref[j] < t_start[j]:
+                    times[ci] = t_ref[j]
+                    tiles[ci] = sweep.decode_sw(sw_ref[j])
+                else:
+                    times[ci] = t_start[j]
+                    tiles[ci] = start[ci]
+        return times, tiles
+
+
+#: below this many hardware points the jit compile cannot pay for itself;
+#: ``engine="auto"`` falls back to the NumPy reference solver.
+_AUTO_MIN_HW = 64
+
+
+def _resolve_engine(engine: str, n_hw: int) -> str:
+    if engine not in ("auto", "jax", "numpy"):
+        raise ValueError(f"unknown engine {engine!r} (want auto|jax|numpy)")
+    # decide every numpy-bound case before touching .sweep: importing it
+    # loads jax (~1s), which the lazy PEP-562 loader exists to avoid
+    if engine == "numpy" or (engine == "auto" and n_hw < _AUTO_MIN_HW):
+        return "numpy"
+    from . import sweep
+
+    if engine == "auto":
+        return "jax" if sweep.HAVE_JAX else "numpy"
+    if not sweep.HAVE_JAX:
+        raise ModuleNotFoundError(
+            "engine='jax' requested but jax is not installed; "
+            "use engine='auto' (soft fallback) or engine='numpy'"
+        )
+    return engine
+
 
 def codesign(
     workload: Workload,
@@ -134,12 +250,27 @@ def codesign(
     hw: Optional[HardwareSpace] = None,
     lattice_2d: TileLattice = LATTICE_2D,
     lattice_3d: TileLattice = LATTICE_3D,
-    chunk: int = 512,
+    chunk: Optional[int] = None,
+    engine: str = "auto",
 ) -> CodesignResult:
     """Solve eq. (18): for every feasible hardware point, the optimal tile
-    sizes (and time) of every workload cell."""
+    sizes (and time) of every workload cell.
+
+    ``engine`` picks the inner solver: ``"jax"`` (compiled sweep),
+    ``"numpy"`` (seed reference), or ``"auto"``. ``chunk`` bounds solver
+    memory (hardware points per slab); ``None`` uses each engine's default.
+    """
     if hw is None:
         hw = enumerate_hw_space(area_model, max_area=max_area)
+    eng = _resolve_engine(engine, len(hw))
+    if eng == "jax":
+        from .sweep import DEFAULT_CHUNK, sweep_cell
+
+        solver = sweep_cell
+        chunk = DEFAULT_CHUNK if chunk is None else chunk
+    else:
+        solver = solve_cell
+        chunk = 512 if chunk is None else chunk
     C, H = len(workload.cells), len(hw)
     cell_time = np.empty((C, H))
     cell_idx = np.empty((C, H), dtype=np.int64)
@@ -147,7 +278,7 @@ def codesign(
     for ci, cell in enumerate(workload.cells):
         lat = lattice_3d if cell.stencil.dims == 3 else lattice_2d
         lattices.append(lat)
-        t, i = solve_cell(
+        t, i = solver(
             cell.stencil, gpu, cell.size, hw.n_sm, hw.n_v, hw.m_sm, lat, chunk
         )
         cell_time[ci] = t
@@ -161,6 +292,7 @@ def evaluate_fixed_hw(
     gpu: GPUSpec = MAXWELL_GPU,
     lattice_2d: TileLattice = LATTICE_2D,
     lattice_3d: TileLattice = LATTICE_3D,
+    engine: str = "auto",
 ) -> Tuple[float, float]:
     """(weighted time, GFLOP/s) of a *fixed* hardware point (e.g. the stock
     GTX-980 / Titan X baselines in Fig. 3) with per-cell optimal tiles --
@@ -171,7 +303,10 @@ def evaluate_fixed_hw(
         m_sm=np.array([point.m_sm], np.float64),
         area=np.array([MAXWELL.area_point(point)]),
     )
-    res = codesign(workload, gpu=gpu, hw=hw, lattice_2d=lattice_2d, lattice_3d=lattice_3d)
+    res = codesign(
+        workload, gpu=gpu, hw=hw, lattice_2d=lattice_2d, lattice_3d=lattice_3d,
+        engine=engine,
+    )
     return float(res.weighted_time()[0]), float(res.gflops()[0])
 
 

@@ -16,6 +16,11 @@ per instance (§IV.B) -- 7 to 24 hours per sweep. We replace bonmin with an
 
 This is the same eq.-(18) decomposition the paper uses; only the inner
 solver is stronger (global-on-lattice instead of a local NLP solve).
+
+This module is the **NumPy reference oracle**: the compiled JAX engine in
+:mod:`repro.core.sweep` must match its argmins cell-by-cell (see
+``tests/test_sweep.py``), and ``benchmarks/bench_sweep.py`` tracks the
+wall-time gap between the two. Keep it simple and exact rather than fast.
 """
 
 from __future__ import annotations
@@ -108,6 +113,8 @@ def solve_cell(
     n_v = np.asarray(n_v, np.float64).ravel()
     m_sm = np.asarray(m_sm, np.float64).ravel()
     H = n_sm.shape[0]
+    if chunk <= 0:  # same contract as the jax engine: no chunking
+        chunk = max(1, H)
     best_t = np.full(H, np.inf)
     best_i = np.full(H, -1, dtype=np.int64)
     for lo in range(0, H, chunk):

@@ -1,0 +1,339 @@
+"""JAX-native codesign sweep engine (the eq.-18 inner solves, compiled).
+
+The seed solved each per-(stencil, size) cell with chunked NumPy broadcasts
+(:func:`repro.core.solver.solve_cell`): serial, CPU-bound, float64, and a
+fresh pile of temporaries per chunk. This module re-expresses the same
+lattice sweep as a **jitted vmap over hardware points x tile-lattice
+candidates**, so XLA fuses the whole time-model expression into one kernel
+and runs it on whatever backend is attached (CPU, GPU, TPU):
+
+* the time model itself is untouched -- :func:`repro.core.timemodel
+  .stencil_time` is called with ``xp=jax.numpy``, so the NumPy path stays
+  the bit-exact reference oracle (see ``tests/test_sweep.py``);
+* problem sizes are *dynamic* jit arguments: one compilation serves all 16
+  paper sizes of a stencil (the seed's sweep shape), instead of recompiling
+  per cell;
+* an optional ``lax.map`` chunking knob bounds peak memory at
+  ``chunk x |lattice|`` floats, for hardware spaces far larger than the
+  paper's ~13k points;
+* coordinate-descent refinement (:func:`refine_points`) is batched across
+  all reported design points at once -- each descent round evaluates every
+  (point, +/-step neighbor) pair in a single compiled call instead of the
+  seed's one-at-a-time Python loops.
+
+When jax is absent ``HAVE_JAX`` is False and every entry point raises
+``ModuleNotFoundError`` -- asking for the compiled engine is an explicit
+contract. Graceful degradation lives one layer up: the driver
+(:mod:`repro.core.codesign`) defaults to ``engine="auto"``, which routes
+to the NumPy reference solver instead of this module.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, Tuple
+
+import numpy as np
+
+from .solver import TileLattice
+from .solver import _STEPS as _SOLVER_STEPS
+from .timemodel import GPUSpec, ProblemSize, StencilSpec, stencil_time
+
+try:  # pragma: no cover - exercised implicitly on import
+    import jax
+    import jax.numpy as jnp
+    from jax import lax
+
+    HAVE_JAX = True
+except ModuleNotFoundError:  # pragma: no cover
+    jax = None
+    jnp = None
+    lax = None
+    HAVE_JAX = False
+
+__all__ = [
+    "HAVE_JAX",
+    "DEFAULT_CHUNK",
+    "sweep_cell",
+    "refine_points",
+    "clear_caches",
+]
+
+#: lax.map chunk: 2048 hw points x ~2.9k lattice candidates x 4 B ~ 24 MB
+#: peak per intermediate -- measured fastest on small CPU hosts (fits L3
+#: alongside the fused expression's live values) and tiny for devices.
+DEFAULT_CHUNK = 2048
+
+#: software-parameter column order used by the packed (P, 5) refine arrays.
+SW_NAMES = ("t_s1", "t_s2", "t_t", "k", "t_s3")
+
+#: aligned unit steps per parameter (eq. 13: warps; eq. 15: even t_T) and
+#: the lower bounds the descent must not cross -- derived from the NumPy
+#: oracle's table so the two refine paths can never drift apart.
+SW_STEPS = tuple(float(_SOLVER_STEPS[k]) for k in SW_NAMES)
+SW_MINS = tuple(1.0 if k == "t_s1" else float(_SOLVER_STEPS[k]) for k in SW_NAMES)
+
+
+def _require_jax():
+    if not HAVE_JAX:
+        raise ModuleNotFoundError(
+            "jax is required for the compiled sweep engine; "
+            "use engine='numpy' (repro.core.solver.solve_cell) instead"
+        )
+
+
+def _lattice_arrays(lattice: TileLattice, gpu: GPUSpec):
+    """Pruned (candidates, original-index) lattice columns.
+
+    Candidates violating the *hardware-independent* feasibility constraints
+    (eqs. 10/12-15 restricted to GPU-family constants) are +inf for every
+    hardware point, so dropping them up front cannot change any argmin --
+    it only shrinks the compiled (H x L) sweep (~28% of the seed's 2D
+    lattice is dead weight). Original lattice indices are kept so callers
+    still receive seed-compatible indices for ``decode_index``.
+    """
+    g = lattice.grid()
+    keep = (
+        (g["k"] * g["t_s2"] <= gpu.max_threads_per_sm)
+        & (g["t_s2"] <= gpu.max_threads_per_block)
+        & (g["k"] <= gpu.max_threadblocks_per_sm)
+        & (g["t_t"] % 2 == 0)
+        & (g["t_s2"] % 32 == 0)
+    )
+    keep_idx = np.nonzero(keep)[0]
+    cols = tuple(jnp.asarray(g[k][keep_idx], jnp.float32) for k in SW_NAMES)
+    return cols, jnp.asarray(keep_idx, jnp.int32)
+
+
+def _traced_spec(dims: int, radius, c_iter, n_arrays) -> StencilSpec:
+    """A StencilSpec carrying tracers for its numeric fields.
+
+    Only ``dims`` shapes the traced program (a static Python branch in the
+    time model); radius / C_iter / n_arrays are plain multiplicands, so
+    passing them as jit arguments lets ALL stencils of a dimensionality
+    share one compiled executable instead of recompiling per stencil.
+    """
+    return StencilSpec(
+        name="<traced>", dims=dims, radius=radius, flops_per_point=0.0,
+        n_arrays=n_arrays, c_iter=c_iter,
+    )
+
+
+@functools.lru_cache(maxsize=None)
+def _cell_solver(dims: int, gpu: GPUSpec, lattice: TileLattice, chunk: int):
+    """Compiled (hardware x lattice) argmin solver, shared per (dims, GPU,
+    lattice, chunk).
+
+    Returned callable:
+    ``(n_sm, n_v, m_sm, s1, s2, s3, t, radius, c_iter, n_arrays)
+    -> (best_t, best_i)`` over (H,) hardware arrays. Sizes and stencil
+    scalars are dynamic, so the whole six-stencil paper sweep compiles
+    exactly twice (2D + 3D); only a new H-shape retraces.
+    """
+    _require_jax()
+    lat, keep_idx = _lattice_arrays(lattice, gpu)
+    if keep_idx.shape[0] == 0:  # no candidate survives the static constraints
+
+        def solve_empty(n_sm, n_v, m_sm, s1, s2, s3, t, radius, c_iter, n_arrays):
+            h = n_sm.shape[0]
+            return jnp.full((h,), jnp.inf), jnp.full((h,), -1, jnp.int32)
+
+        return solve_empty
+
+    def tile_times(hw_point, size_scalars, st):
+        """(L,) candidate times for one hardware point -- the vmap body."""
+        n_sm, n_v, m_sm = hw_point
+        s1, s2, s3, t = size_scalars
+        size = ProblemSize(s1=s1, s2=s2, t=t, s3=s3)
+        return stencil_time(
+            st, gpu, size, n_sm, n_v, m_sm, *lat, xp=jnp, dtype=jnp.float32
+        )
+
+    def best_of(hw_chunk, size_scalars, st):
+        times = jax.vmap(lambda p: tile_times(p, size_scalars, st))(hw_chunk)
+        best_i = jnp.argmin(times, axis=1)
+        best_t = jnp.take_along_axis(times, best_i[:, None], axis=1)[:, 0]
+        # map back to seed lattice indices; -1 where nothing was feasible
+        best_i = jnp.where(jnp.isfinite(best_t), keep_idx[best_i], -1)
+        return best_t, best_i
+
+    @jax.jit
+    def solve(n_sm, n_v, m_sm, s1, s2, s3, t, radius, c_iter, n_arrays):
+        st = _traced_spec(dims, radius, c_iter, n_arrays)
+        size_scalars = (s1, s2, s3, t)
+        hw = jnp.stack([n_sm, n_v, m_sm], axis=1)  # (H, 3)
+        h = hw.shape[0]
+        if chunk <= 0 or h <= chunk:
+            return best_of(hw, size_scalars, st)
+        # pad to a chunk multiple, lax.map over (B, chunk, 3) slabs so peak
+        # memory is chunk x |lattice| regardless of |hardware space|.
+        b = -(-h // chunk)
+        pad = b * chunk - h
+        hw = jnp.concatenate([hw, jnp.broadcast_to(hw[:1], (pad, 3))], axis=0)
+        best_t, best_i = lax.map(
+            lambda slab: best_of(slab, size_scalars, st),
+            hw.reshape(b, chunk, 3),
+        )
+        return best_t.reshape(-1)[:h], best_i.reshape(-1)[:h]
+
+    return solve
+
+
+def sweep_cell(
+    st: StencilSpec,
+    gpu: GPUSpec,
+    size: ProblemSize,
+    n_sm: np.ndarray,
+    n_v: np.ndarray,
+    m_sm: np.ndarray,
+    lattice: TileLattice | None = None,
+    chunk: int = DEFAULT_CHUNK,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Drop-in replacement for :func:`repro.core.solver.solve_cell`.
+
+    Returns ``(best_time (H,), best_lattice_index (H,))`` as float64/int64
+    NumPy arrays; infeasible hardware points get ``+inf`` / ``-1``.
+    Raises ``ModuleNotFoundError`` when jax is unavailable (use
+    ``codesign(engine="auto")`` or the NumPy solver for soft fallback).
+    """
+    _require_jax()
+    if lattice is None:
+        from .solver import LATTICE_2D, LATTICE_3D
+
+        lattice = LATTICE_3D if st.dims == 3 else LATTICE_2D
+    solve = _cell_solver(st.dims, gpu, lattice, int(chunk))
+    f32 = functools.partial(jnp.asarray, dtype=jnp.float32)
+    best_t, best_i = solve(
+        f32(np.asarray(n_sm).ravel()),
+        f32(np.asarray(n_v).ravel()),
+        f32(np.asarray(m_sm).ravel()),
+        f32(size.s1),
+        f32(size.s2),
+        f32(size.s3),
+        f32(size.t),
+        f32(st.radius),
+        f32(st.c_iter),
+        f32(st.n_arrays),
+    )
+    return (
+        np.asarray(best_t, np.float64),
+        np.asarray(best_i, np.int64),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Batched coordinate-descent refinement
+# ---------------------------------------------------------------------------
+@functools.lru_cache(maxsize=None)
+def _refine_round(dims: int, gpu: GPUSpec):
+    """Compiled one-round best-neighbor descent over (P,) design points.
+
+    Candidates per point: current + (+step, -step) for each of the 5
+    software parameters, clamped to the aligned lower bounds. Returns the
+    per-point best candidate of the round (Jacobi-style: all points move
+    simultaneously, each to its best single-parameter neighbor).
+    """
+    _require_jax()
+    steps = jnp.asarray(SW_STEPS, jnp.float32)
+    mins = jnp.asarray(SW_MINS, jnp.float32)
+    n_par = len(SW_NAMES)
+
+    def candidates(sw):
+        """(2*n_par + 1, 5): current point first, then +/- steps."""
+        deltas = jnp.concatenate(
+            [jnp.zeros((1, n_par)), jnp.diag(steps), -jnp.diag(steps)], axis=0
+        )
+        return jnp.maximum(sw[None, :] + deltas, mins[None, :])
+
+    def eval_point(st, hw, size_scalars, sw_cands):
+        n_sm, n_v, m_sm = hw
+        s1, s2, s3, t = size_scalars
+        size = ProblemSize(s1=s1, s2=s2, t=t, s3=s3)
+        return stencil_time(
+            st, gpu, size, n_sm, n_v, m_sm,
+            sw_cands[:, 0], sw_cands[:, 1], sw_cands[:, 2], sw_cands[:, 3],
+            sw_cands[:, 4], xp=jnp, dtype=jnp.float32,
+        )
+
+    @jax.jit
+    def step(hw, sizes, sw, radius, c_iter, n_arrays):
+        """hw (P,3), sizes (P,4), sw (P,5) -> (times (P,), sw' (P,5))."""
+        st = _traced_spec(dims, radius, c_iter, n_arrays)
+        cands = jax.vmap(candidates)(sw)  # (P, 2n+1, 5)
+        times = jax.vmap(
+            lambda h, s, c: eval_point(st, h, (s[0], s[1], s[2], s[3]), c)
+        )(hw, sizes, cands)  # (P, 2n+1)
+        best = jnp.argmin(times, axis=1)
+        best_t = jnp.take_along_axis(times, best[:, None], axis=1)[:, 0]
+        best_sw = jnp.take_along_axis(cands, best[:, None, None], axis=1)[:, 0]
+        return best_t, best_sw
+
+    return step
+
+
+def refine_points(
+    st: StencilSpec,
+    gpu: GPUSpec,
+    sizes: np.ndarray,
+    hw: np.ndarray,
+    sw0: np.ndarray,
+    max_rounds: int = 64,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Coordinate descent over aligned integer steps, batched over P points.
+
+    Parameters
+    ----------
+    sizes: (P, 4) float array of (s1, s2, s3, t) per design point.
+    hw:    (P, 3) float array of (n_sm, n_v, m_sm).
+    sw0:   (P, 5) float array of starting tile sizes in :data:`SW_NAMES`
+           order (e.g. lattice optima from :func:`sweep_cell`).
+
+    Returns ``(times (P,), sw (P, 5))`` where no point's single aligned-step
+    neighbor improves on its returned tile sizes (the same local-exactness
+    guarantee as the seed's :func:`repro.core.solver.refine_point`, reached
+    by best-neighbor rounds instead of first-improvement scans). As with
+    the seed, the guarantee holds only when the descent converges within
+    ``max_rounds``; lattice-optimum starts (the intended use) converge in a
+    handful of rounds, but arbitrary far-from-optimal ``sw0`` may exhaust
+    the budget and return the best point reached so far. The whole batch
+    descends in lock-step: each round is ONE compiled evaluation of all
+    ``P x 11`` candidates rather than P independent Python loops.
+    """
+    _require_jax()
+    step = _refine_round(st.dims, gpu)
+    hw = jnp.asarray(np.asarray(hw, np.float64), jnp.float32)
+    sizes = jnp.asarray(np.asarray(sizes, np.float64), jnp.float32)
+    sw = jnp.asarray(np.asarray(sw0, np.float64), jnp.float32)
+    scalars = tuple(
+        jnp.asarray(v, jnp.float32) for v in (st.radius, st.c_iter, st.n_arrays)
+    )
+    cur = None
+    for _ in range(max_rounds):
+        best_t, best_sw = step(hw, sizes, sw, *scalars)
+        # a no-movement round means every point sat still (argmin ties break
+        # to the current point), so best_t is exact -- record it and stop.
+        converged = bool(jnp.all(best_sw == sw))
+        cur, sw = best_t, best_sw
+        if converged:
+            break
+    sw = np.asarray(sw, np.float64)
+    if cur is None:  # max_rounds=0: return the start points, like the oracle
+        sz = np.asarray(sizes, np.float64)
+        hw64 = np.asarray(hw, np.float64)
+        size = ProblemSize(s1=sz[:, 0], s2=sz[:, 1], t=sz[:, 3], s3=sz[:, 2])
+        cur = stencil_time(
+            st, gpu, size, hw64[:, 0], hw64[:, 1], hw64[:, 2],
+            sw[:, 0], sw[:, 1], sw[:, 2], sw[:, 3], sw[:, 4],
+        )
+    return np.asarray(cur, np.float64), sw
+
+
+def decode_sw(sw_row: np.ndarray) -> Dict[str, int]:
+    """(5,) packed software-parameter row -> tile-size dict."""
+    return {name: int(v) for name, v in zip(SW_NAMES, sw_row)}
+
+
+def clear_caches() -> None:
+    """Drop compiled solvers (mainly for tests/benchmarks timing cold starts)."""
+    _cell_solver.cache_clear()
+    _refine_round.cache_clear()

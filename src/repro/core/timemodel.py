@@ -31,8 +31,13 @@ Model (all floor/ceil kept -- the paper's non-smoothness is intentional):
   ``T_batch = max(T_compute_tile, n_active*footprint/BW)``;
 * ``T_alg = 2*ceil(T/t_T) * (batches*T_batch + launch_overhead)``.
 
-Everything is vectorized over numpy arrays so the solver can sweep the
-(hardware x tile) lattice in bulk.
+Every evaluation function is *backend-generic*: it takes an array namespace
+``xp`` (``numpy`` by default, ``jax.numpy`` for the JIT-compiled sweep
+engine in :mod:`repro.core.sweep`) and only uses ops both provide. The only
+Python-level branches are on **static** stencil structure (``st.dims``),
+never on array values, so the functions trace cleanly under ``jax.jit`` /
+``jax.vmap`` while staying bit-compatible with the seed's NumPy float64
+path when called with the defaults.
 """
 
 from __future__ import annotations
@@ -49,6 +54,7 @@ __all__ = [
     "STENCILS",
     "MAXWELL_GPU",
     "TITANX_GPU",
+    "footprint_bytes",
     "stencil_time",
     "stencil_gflops",
     "feasible",
@@ -82,7 +88,13 @@ class GPUSpec:
 
 @dataclasses.dataclass(frozen=True)
 class ProblemSize:
-    """Problem parameters p. ``s3 = 1`` for 2D stencils."""
+    """Problem parameters p. ``s3 = 1`` for 2D stencils.
+
+    Fields are ints for concrete sizes, but the sweep engine may carry JAX
+    tracers here (sizes are *dynamic* under jit so one compiled sweep serves
+    every problem size) -- hence nothing below hashes or int()-casts them
+    except the convenience :attr:`points` property.
+    """
 
     s1: int
     s2: int
@@ -115,23 +127,33 @@ MAXWELL_GPU = GPUSpec(name="gtx980", bw_gmem=224.0e9)
 TITANX_GPU = GPUSpec(name="titanx", bw_gmem=336.0e9)
 
 
-def _ceil_div(a, b):
-    return np.ceil(np.asarray(a, np.float64) / np.asarray(b, np.float64))
+def _dtype_for(xp, dtype):
+    """Default working dtype: float64 on NumPy (seed-exact), float32 on JAX
+    backends (float64 would silently downcast unless x64 mode is on)."""
+    if dtype is not None:
+        return dtype
+    return np.float64 if xp is np else np.float32
 
 
-def footprint_bytes(st: StencilSpec, gpu: GPUSpec, t_s1, t_s2, t_t, t_s3=1):
+def _ceil_div(xp, a, b):
+    return xp.ceil(a / b)
+
+
+def footprint_bytes(st: StencilSpec, gpu: GPUSpec, t_s1, t_s2, t_t, t_s3=1, *, xp=np, dtype=None):
     """Shared-memory bytes needed by one tile (halo-expanded, all arrays)."""
+    dtype = _dtype_for(xp, dtype)
     s = st.radius
-    w_max = np.asarray(t_s1, np.float64) + 2.0 * s * np.asarray(t_t, np.float64)
-    depth = (
-        np.asarray(t_s3, np.float64) + 2.0 * s
-        if st.dims == 3
-        else np.ones_like(np.asarray(t_s3, np.float64))
-    )
+    t_s1 = xp.asarray(t_s1, dtype)
+    t_s2 = xp.asarray(t_s2, dtype)
+    t_t = xp.asarray(t_t, dtype)
+    t_s3 = xp.asarray(t_s3, dtype)
+    w_max = t_s1 + 2.0 * s * t_t
+    # static branch on stencil structure -- never on array values
+    depth = t_s3 + 2.0 * s if st.dims == 3 else xp.ones_like(t_s3)
     return (
         st.n_arrays
         * (w_max + 2.0 * s)
-        * (np.asarray(t_s2, np.float64) + 2.0 * s)
+        * (t_s2 + 2.0 * s)
         * depth
         * gpu.bytes_per_word
     )
@@ -148,16 +170,21 @@ def feasible(
     t_t,
     k,
     t_s3=1,
+    *,
+    xp=np,
+    dtype=None,
 ):
     """Feasibility mask, eqs. (9)-(15). Broadcasts over array inputs."""
-    t_s2 = np.asarray(t_s2, np.float64)
-    k = np.asarray(k, np.float64)
-    fp = footprint_bytes(st, gpu, t_s1, t_s2, t_t, t_s3)
-    ok = k * fp <= np.asarray(m_sm, np.float64) * 1024.0  # eq. (11) [& (9)]
+    dtype = _dtype_for(xp, dtype)
+    t_s2 = xp.asarray(t_s2, dtype)
+    t_t = xp.asarray(t_t, dtype)
+    k = xp.asarray(k, dtype)
+    fp = footprint_bytes(st, gpu, t_s1, t_s2, t_t, t_s3, xp=xp, dtype=dtype)
+    ok = k * fp <= xp.asarray(m_sm, dtype) * 1024.0  # eq. (11) [& (9)]
     ok &= k <= gpu.max_threadblocks_per_sm  # eq. (10)
     ok &= t_s2 <= gpu.max_threads_per_block
     ok &= k * t_s2 <= gpu.max_threads_per_sm
-    ok &= np.asarray(t_t, np.float64) % 2 == 0  # eq. (15): t_T even (HHC)
+    ok &= t_t % 2 == 0  # eq. (15): t_T even (HHC)
     ok &= t_s2 % 32 == 0  # eq. (13): full warps
     return ok
 
@@ -174,46 +201,57 @@ def stencil_time(
     t_t,
     k,
     t_s3=1,
+    *,
+    xp=np,
+    dtype=None,
 ):
-    """T_alg in seconds. Infeasible points get +inf. Fully vectorized."""
-    n_sm = np.asarray(n_sm, np.float64)
-    n_v = np.asarray(n_v, np.float64)
-    t_s1 = np.asarray(t_s1, np.float64)
-    t_s2 = np.asarray(t_s2, np.float64)
-    t_t = np.asarray(t_t, np.float64)
-    k = np.asarray(k, np.float64)
-    t_s3 = np.asarray(t_s3, np.float64)
+    """T_alg in seconds. Infeasible points get +inf. Fully vectorized, and
+    traceable under jit/vmap when called with ``xp=jax.numpy``."""
+    dtype = _dtype_for(xp, dtype)
+    n_sm = xp.asarray(n_sm, dtype)
+    n_v = xp.asarray(n_v, dtype)
+    t_s1 = xp.asarray(t_s1, dtype)
+    t_s2 = xp.asarray(t_s2, dtype)
+    t_t = xp.asarray(t_t, dtype)
+    k = xp.asarray(k, dtype)
+    t_s3 = xp.asarray(t_s3, dtype)
+    s1 = xp.asarray(size.s1, dtype)
+    s2 = xp.asarray(size.s2, dtype)
+    s3 = xp.asarray(size.s3, dtype)
+    t_total = xp.asarray(size.t, dtype)
     s = st.radius
 
     w_avg = t_s1 + s * t_t
-    fp = footprint_bytes(st, gpu, t_s1, t_s2, t_t, t_s3)
+    fp = footprint_bytes(st, gpu, t_s1, t_s2, t_t, t_s3, xp=xp, dtype=dtype)
 
     # --- compute time of one co-resident group (k blocks -> k tiles done).
-    serial = np.ceil(k * t_s2 / n_v)
+    serial = xp.ceil(k * t_s2 / n_v)
     t_compute = st.c_iter * t_t * w_avg * t_s3 * serial
 
     # --- phase structure.
     tiles_phase = (
-        np.ceil(_ceil_div(size.s1, w_avg) / 2.0)
-        * _ceil_div(size.s2, t_s2)
-        * (_ceil_div(size.s3, t_s3) if st.dims == 3 else 1.0)
+        xp.ceil(_ceil_div(xp, s1, w_avg) / 2.0)
+        * _ceil_div(xp, s2, t_s2)
+        * (_ceil_div(xp, s3, t_s3) if st.dims == 3 else 1.0)
     )
-    tiles_phase = np.maximum(tiles_phase, 1.0)
-    concurrent = np.minimum(k * n_sm, tiles_phase)
-    batches = _ceil_div(tiles_phase, k * n_sm)
+    tiles_phase = xp.maximum(tiles_phase, 1.0)
+    concurrent = xp.minimum(k * n_sm, tiles_phase)
+    batches = _ceil_div(xp, tiles_phase, k * n_sm)
 
     # --- per-batch: all concurrent tiles' global traffic shares BW.
     t_mem = concurrent * fp / gpu.bw_gmem
-    t_batch = np.maximum(t_compute, t_mem)
+    t_batch = xp.maximum(t_compute, t_mem)
 
-    phases = 2.0 * _ceil_div(size.t, t_t)
+    phases = 2.0 * _ceil_div(xp, t_total, t_t)
     t_alg = phases * (batches * t_batch + gpu.launch_overhead)
 
-    ok = feasible(st, gpu, n_sm, n_v, m_sm, t_s1, t_s2, t_t, k, t_s3)
-    return np.where(ok, t_alg, np.inf)
+    ok = feasible(
+        st, gpu, n_sm, n_v, m_sm, t_s1, t_s2, t_t, k, t_s3, xp=xp, dtype=dtype
+    )
+    return xp.where(ok, t_alg, xp.inf)
 
 
-def stencil_gflops(st: StencilSpec, size: ProblemSize, t_alg_seconds):
+def stencil_gflops(st: StencilSpec, size: ProblemSize, t_alg_seconds, *, xp=np):
     """Achieved GFLOP/s given a T_alg (broadcasts)."""
     total = st.flops_per_point * size.points
-    return total / np.asarray(t_alg_seconds, np.float64) / 1.0e9
+    return total / xp.asarray(t_alg_seconds) / 1.0e9

@@ -9,6 +9,10 @@ import sys
 
 import pytest
 
+# multi-second jit compiles: the fast CI lane deselects these (-m "not slow");
+# the weekly scheduled lane (and a bare local `pytest`) still runs them
+pytestmark = pytest.mark.slow
+
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 

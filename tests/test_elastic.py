@@ -6,6 +6,11 @@ import os
 import subprocess
 import sys
 import textwrap
+import pytest
+
+# multi-second jit compiles: the fast CI lane deselects these (-m "not slow");
+# the weekly scheduled lane (and a bare local `pytest`) still runs them
+pytestmark = pytest.mark.slow
 
 SCRIPT = textwrap.dedent(
     """

@@ -12,6 +12,10 @@ from repro.models import forward, init_model
 from repro.serve import generate, init_caches, make_decode_step, make_prefill
 from repro.serve.kvcache import cache_bytes
 
+# multi-second jit compiles: the fast CI lane deselects these (-m "not slow");
+# the weekly scheduled lane (and a bare local `pytest`) still runs them
+pytestmark = pytest.mark.slow
+
 
 def _greedy_reference(params, cfg, tokens, steps):
     """Teacher-forced rollout with full recompute each step (no cache)."""

@@ -15,6 +15,10 @@ from repro.data import DataConfig
 from repro.optim import AdamWConfig
 from repro.train import TrainConfig, Trainer, TrainerConfig
 
+# multi-second jit compiles: the fast CI lane deselects these (-m "not slow");
+# the weekly scheduled lane (and a bare local `pytest`) still runs them
+pytestmark = pytest.mark.slow
+
 SHAPE = ShapeSpec("tiny", 32, 4, "train")
 
 
