@@ -1,0 +1,109 @@
+"""Codesign query service: queries/sec cold (artifact miss -> full eq.-18
+sweep) vs warm (stored artifact -> vectorized re-reductions).
+
+Cold is measured against a throwaway store so the number is honest even
+when CI restored the persistent artifact cache; warm is measured against
+the persistent store with a fresh server (artifact mmap-loaded from disk,
+LRU cold), then with the LRU primed, then through the stacked
+``query_many`` matmul. The warm/cold ratio is asserted >= 100x -- the
+entire point of persisting the separability matrix."""
+
+from __future__ import annotations
+
+import os
+import shutil
+import tempfile
+import time
+
+import numpy as np
+
+from repro.service import ArtifactStore, CodesignServer, QueryRequest
+
+from .common import ARTIFACTS, SMOKE_HW_STRIDE, emit, skey, smoke
+
+#: distinct frequency mixes per warm pass (all LRU misses on the first lap)
+N_MIXES = 64
+
+STENCIL_NAMES = (
+    "jacobi2d", "heat2d", "laplacian2d", "gradient2d", "heat3d", "laplacian3d",
+)
+
+
+def _mixes(rng: np.random.Generator, n: int):
+    return [
+        QueryRequest(
+            freqs=dict(zip(STENCIL_NAMES, rng.uniform(0.05, 1.0, size=6))),
+            max_area=650.0,
+            top_k=3,
+        )
+        for _ in range(n)
+    ]
+
+
+def run() -> None:
+    downsample = SMOKE_HW_STRIDE if smoke() else 1
+    rng = np.random.default_rng(2017)
+
+    # --- cold: throwaway store, one query pays sweep + persist + reduce ----
+    tmp = tempfile.mkdtemp(prefix="bench-service-cold-")
+    try:
+        cold_srv = CodesignServer(
+            ArtifactStore(tmp), downsample=downsample, batch_window=0.0
+        )
+        assert not cold_srv.warm
+        t0 = time.perf_counter()
+        cold_resp = cold_srv.query(_mixes(rng, 1)[0])
+        t_cold = time.perf_counter() - t0
+        assert cold_srv.stats["artifact_builds"] == 1
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+    emit(
+        "service_cold", t_cold * 1e6,
+        f"miss path: sweep + persist + query = {t_cold:.2f}s "
+        f"({1.0/t_cold:.3f} q/s), best {cold_resp.best_gflops:.0f} GFLOP/s",
+    )
+
+    # --- warm: persistent store (CI caches it between steps/runs) ---------
+    root = os.path.join(ARTIFACTS, skey("service"))
+    store = ArtifactStore(root)
+    CodesignServer(store, downsample=downsample, batch_window=0.0).ensure_artifact()
+
+    srv = CodesignServer(store, downsample=downsample, batch_window=0.0)
+    assert srv.warm, "persistent artifact should be on disk by now"
+    reqs = _mixes(rng, N_MIXES)
+    t0 = time.perf_counter()
+    for r in reqs:
+        srv.query(r)
+    t_warm = time.perf_counter() - t0
+    assert srv.stats["artifact_builds"] == 0
+    qps_warm = len(reqs) / t_warm
+    emit(
+        "service_warm", t_warm / len(reqs) * 1e6,
+        f"{len(reqs)} distinct mixes (LRU cold): {qps_warm:.0f} q/s",
+    )
+
+    t0 = time.perf_counter()
+    for r in reqs:
+        srv.query(r)
+    t_lru = time.perf_counter() - t0
+    emit(
+        "service_warm_lru", t_lru / len(reqs) * 1e6,
+        f"same mixes again (LRU hot): {len(reqs)/t_lru:.0f} q/s",
+    )
+
+    batch = _mixes(rng, N_MIXES)
+    t0 = time.perf_counter()
+    srv.query_many(batch)
+    t_batch = time.perf_counter() - t0
+    emit(
+        "service_batched", t_batch / len(batch) * 1e6,
+        f"one stacked (B={len(batch)}) matmul: {len(batch)/t_batch:.0f} q/s",
+    )
+
+    ratio = qps_warm / (1.0 / t_cold)
+    emit(
+        "service_speedup", t_cold * 1e6,
+        f"warm/cold queries-per-sec ratio {ratio:.0f}x "
+        f"(acceptance floor 100x)",
+    )
+    assert ratio >= 100.0, f"warm path only {ratio:.1f}x cold"

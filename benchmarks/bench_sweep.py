@@ -17,7 +17,15 @@ from repro.core import MAXWELL, codesign, enumerate_hw_space
 from repro.core import sweep
 from repro.core.workload import paper_workload
 
-from .common import SMOKE_HW_STRIDE, STENCIL_CLASSES as CLASSES, emit, smoke
+from .common import (
+    SMOKE_HW_STRIDE,
+    STENCIL_CLASSES as CLASSES,
+    cache_json,
+    emit,
+    refine_enabled,
+    skey,
+    smoke,
+)
 
 
 def _equivalent(res_np, res_jax) -> float:
@@ -28,6 +36,46 @@ def _equivalent(res_np, res_jax) -> float:
         return float("inf")
     gap = np.abs(res_jax.cell_time[finite] - res_np.cell_time[finite])
     return float(np.max(gap / res_np.cell_time[finite]))
+
+
+def _refine_stage(cls: str, res) -> None:
+    """Polish the reported best design with the batched coordinate descent
+    (CodesignResult.refine) and land the speedup/quality delta in the
+    artifact JSON -- the refine trajectory is now part of the tracked
+    benchmark surface, not just a test fixture."""
+    i, g0 = res.best(max_area=650.0)
+    wt0 = float(res.weighted_time()[i])
+    t0 = time.perf_counter()
+    times, _ = res.refine(i)
+    dt = time.perf_counter() - t0
+    freqs = res.cell_freqs()
+    wt1 = float(freqs @ times)
+    flops = float(freqs @ res.cell_flops())
+    g1 = flops / wt1 / 1.0e9
+    improved = int(np.sum(times < res.cell_time[:, i]))
+    rec = {
+        "class": cls,
+        "best_index": int(i),
+        "refine_s": round(dt, 4),
+        "cells_improved": improved,
+        "cells": int(len(times)),
+        "weighted_time_lattice_s": wt0,
+        "weighted_time_refined_s": wt1,
+        "gflops_lattice": g0,
+        "gflops_refined": g1,
+        "quality_delta_pct": 100.0 * (g1 / g0 - 1.0) if g0 else 0.0,
+    }
+    cache_json(skey(f"sweep_refine_{cls}"), lambda: rec, force=True)
+    emit(
+        f"sweep_refine_{cls}", dt * 1e6,
+        f"best design {i}: {improved}/{len(times)} cells improved, "
+        f"{g0:.1f} -> {g1:.1f} GFLOP/s ({rec['quality_delta_pct']:+.2f}%) "
+        f"in {dt:.2f}s",
+    )
+    # wt0 is the jax engine's float32 sweep; wt1 is refine's float64
+    # re-evaluation -- allow the cross-engine noise bound (same RTOL as the
+    # equivalence tests), not a bitwise comparison
+    assert wt1 <= wt0 * (1 + 1e-5), "refine regressed the lattice optimum"
 
 
 def run() -> None:
@@ -64,6 +112,8 @@ def run() -> None:
             f"({t_np/t_warm:.1f}x); max argmin gap {gap:.1e}",
         )
         assert gap < 1e-5, f"engines diverged on {cls}: {gap}"
+        if refine_enabled():
+            _refine_stage(cls, res_jax)
     emit(
         "sweep_total", total_jax * 1e6,
         f"numpy {total_np:.1f}s vs jax {total_jax:.1f}s cold incl. compile "

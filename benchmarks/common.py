@@ -28,6 +28,12 @@ def smoke() -> bool:
     return os.environ.get("REPRO_BENCH_SMOKE", "") == "1"
 
 
+def refine_enabled() -> bool:
+    """True when ``benchmarks/run.py --refine`` asked the sweep suite to run
+    the batched coordinate-descent polish stage (same env contract)."""
+    return os.environ.get("REPRO_BENCH_REFINE", "") == "1"
+
+
 def skey(key: str) -> str:
     """Artifact cache key, segregated per mode so smoke runs never poison
     (or read) the full-fidelity cache."""

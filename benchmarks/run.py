@@ -11,6 +11,7 @@ Prints ``name,us_per_call,derived`` CSV lines (harness contract).
   bench_kernels             -- workload  Pallas stencil kernels vs oracle
   bench_meshopt             -- beyond-paper: TPU mesh codesign (eq. 18)
   bench_roofline            -- SRoofline summary from dry-run artifacts
+  bench_service             -- query service: cold sweep vs warm artifact
 
 ``--smoke`` runs every suite on tiny problem sizes / downsampled hardware
 spaces (separate artifact cache), sized for a CI lane: the point is that
@@ -27,7 +28,7 @@ import traceback
 
 SUITE_NAMES = [
     "area", "pareto", "sweep", "sensitivity", "cache_removal",
-    "resource_allocation", "kernels", "meshopt", "roofline",
+    "resource_allocation", "kernels", "meshopt", "roofline", "service",
 ]
 
 
@@ -45,11 +46,19 @@ def main() -> None:
         action="store_true",
         help="tiny CI-runnable sizes (downsampled hw space, small kernels)",
     )
+    ap.add_argument(
+        "--refine",
+        action="store_true",
+        help="sweep suite: add the batched coordinate-descent refine stage "
+        "(speedup/quality delta lands in the artifact JSON)",
+    )
     args = ap.parse_args()
     if args.smoke:
         # env (not a global) so suite modules can check common.smoke()
         # regardless of import order
         os.environ["REPRO_BENCH_SMOKE"] = "1"
+    if args.refine:
+        os.environ["REPRO_BENCH_REFINE"] = "1"
 
     from . import (
         bench_area,
@@ -60,6 +69,7 @@ def main() -> None:
         bench_resource_allocation,
         bench_roofline,
         bench_sensitivity,
+        bench_service,
         bench_sweep,
     )
 
@@ -76,6 +86,7 @@ def main() -> None:
                 bench_kernels,
                 bench_meshopt,
                 bench_roofline,
+                bench_service,
             ],
             strict=True,  # a skewed registry must be a hard error
         )

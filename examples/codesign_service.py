@@ -1,0 +1,59 @@
+"""Serving codesign queries from a persisted sweep artifact.
+
+The first run sweeps the paper's Fig.-3 workload once (eq. 18) and writes
+the (cells x hardware) optima matrix through the artifact store; every
+later run -- and every query in between -- is a warm, engine-free matrix
+re-reduction ("sensitivity for free", §V.B).
+
+Run: PYTHONPATH=src python examples/codesign_service.py [--fast]
+     (--fast downsamples the hardware space ~8x; store under ./artifacts)
+"""
+
+import argparse
+import concurrent.futures
+import time
+
+from repro.service import ArtifactStore, CodesignServer, QueryRequest
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--fast", action="store_true")
+ap.add_argument("--store", default="benchmarks/artifacts/service_example")
+args = ap.parse_args()
+
+srv = CodesignServer(
+    ArtifactStore(args.store), downsample=8 if args.fast else 1
+)
+print(f"store: {srv.store.root}\nartifact key: {srv.key} "
+      f"({'warm' if srv.warm else 'cold: sweeping once'})")
+
+t0 = time.perf_counter()
+resp = srv.query(QueryRequest(max_area=450.0, top_k=3))
+print(f"\nuniform mix, <=450 mm^2  ({time.perf_counter()-t0:.3f}s):")
+for r in resp.top_k:
+    print(f"  n_SM={r['n_sm']:3d} n_V={r['n_v']:4d} M_SM={r['m_sm']:4.0f}kB "
+          f"area={r['area']:6.1f}  {r['gflops']:8.1f} GFLOP/s")
+
+# 1) arbitrary mixes are one matmul row each
+t0 = time.perf_counter()
+heavy3d = srv.query(QueryRequest(freqs={"heat3d": 3.0, "laplacian3d": 1.0}))
+print(f"\n3D-heavy mix ({(time.perf_counter()-t0)*1e3:.1f} ms): "
+      f"best {heavy3d.best_point} @ {heavy3d.best_gflops:.1f} GFLOP/s")
+
+# 2) what-if: freeze a design parameter, read the delta off the response
+fixed = srv.query(QueryRequest(fix={"n_sm": 16.0}))
+print(f"fix n_SM=16: {fixed.best_gflops:.1f} GFLOP/s "
+      f"({fixed.best_gflops - fixed.baseline_best_gflops:+.1f} vs unrestricted)")
+
+# 3) Pareto front of the current mix
+front = srv.query(QueryRequest(pareto=True))
+print(f"Pareto-optimal designs: {front.pareto_indices.size} of {len(srv.hw)}")
+
+# 4) concurrent callers microbatch into one (B, C) @ (C, H) matmul
+mixes = [QueryRequest(freqs={"heat2d": 1.0 + 0.1 * i, "jacobi2d": 1.0})
+         for i in range(16)]
+t0 = time.perf_counter()
+with concurrent.futures.ThreadPoolExecutor(16) as pool:
+    list(pool.map(srv.query, mixes))
+dt = time.perf_counter() - t0
+print(f"16 concurrent queries: {dt*1e3:.1f} ms total, "
+      f"max microbatch {srv.stats['max_batch']}")

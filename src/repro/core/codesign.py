@@ -28,7 +28,7 @@ from .area import GTX980, TITAN_X, HardwarePoint, LinearAreaModel, MAXWELL
 from .pareto import pareto_mask
 from .solver import LATTICE_2D, LATTICE_3D, TileLattice, decode_index, solve_cell
 from .timemodel import GPUSpec, MAXWELL_GPU, ProblemSize, stencil_time
-from .workload import Workload
+from .workload import Workload, WorkloadCell
 
 __all__ = [
     "HardwareSpace",
@@ -93,6 +93,30 @@ def enumerate_hw_space(
     return HardwareSpace(n_sm[keep], n_v[keep], m_sm[keep], area[keep])
 
 
+def _stencil_groups(
+    workload: Workload, indices: Optional[Sequence[int]] = None
+) -> Dict[str, Tuple[object, List[int], np.ndarray]]:
+    """Cells grouped per stencil family for batched dispatch: name ->
+    (stencil spec, cell indices, (P, 4) sizes as (s1, s2, s3, t) rows).
+    Shared by the sweep driver and ``CodesignResult.refine`` so the two
+    batching paths cannot drift. Grouping is by stencil *name* -- cells of
+    one family must share a spec (and, by dims, a lattice)."""
+    groups: Dict[str, List[int]] = {}
+    for ci in range(len(workload.cells)) if indices is None else indices:
+        groups.setdefault(workload.cells[ci].stencil.name, []).append(ci)
+    out: Dict[str, Tuple[object, List[int], np.ndarray]] = {}
+    for name, cis in groups.items():
+        sizes = np.array(
+            [
+                (c.size.s1, c.size.s2, c.size.s3, c.size.t)
+                for c in (workload.cells[ci] for ci in cis)
+            ],
+            np.float64,
+        )
+        out[name] = (workload.cells[cis[0]].stencil, cis, sizes)
+    return out
+
+
 @dataclasses.dataclass
 class CodesignResult:
     """Per-cell optimal times for every hardware point (eq. 18 inner solves)
@@ -106,23 +130,32 @@ class CodesignResult:
     lattices: List[TileLattice]  # per cell
 
     # ---- reductions -------------------------------------------------------
+    def cell_freqs(self) -> np.ndarray:
+        """(C,) default workload frequencies."""
+        return np.array([c.freq for c in self.workload.cells], np.float64)
+
+    def cell_flops(self) -> np.ndarray:
+        """(C,) useful flops per cell -- the gflops numerator, exposed so
+        artifact consumers can re-reduce without Workload objects."""
+        return np.array(
+            [c.stencil.flops_per_point * c.size.points for c in self.workload.cells],
+            np.float64,
+        )
+
     def weighted_time(self, freqs: Optional[np.ndarray] = None) -> np.ndarray:
         """Eq. (17) objective per hardware point; default = workload freqs.
         Passing new ``freqs`` is the §V.B sensitivity-for-free path."""
         if freqs is None:
-            freqs = np.array([c.freq for c in self.workload.cells])
+            freqs = self.cell_freqs()
         freqs = np.asarray(freqs, np.float64)
         return freqs @ self.cell_time
 
     def gflops(self, freqs: Optional[np.ndarray] = None) -> np.ndarray:
         """Workload performance: weighted useful flops / weighted time."""
         if freqs is None:
-            freqs = np.array([c.freq for c in self.workload.cells])
+            freqs = self.cell_freqs()
         freqs = np.asarray(freqs, np.float64)
-        flops = np.array(
-            [c.stencil.flops_per_point * c.size.points for c in self.workload.cells]
-        )
-        return (freqs @ flops) / self.weighted_time(freqs) / 1.0e9
+        return (freqs @ self.cell_flops()) / self.weighted_time(freqs) / 1.0e9
 
     def pareto(self, freqs: Optional[np.ndarray] = None) -> np.ndarray:
         """Pareto mask over (area, GFLOP/s)."""
@@ -160,19 +193,12 @@ class CodesignResult:
         tiles: List[Optional[Dict[str, int]]] = [None] * len(times)
         point = self.hw.point(hw_index)
         hw_row = (float(point.n_sm), float(point.n_v), float(point.m_sm))
-        groups: Dict[str, List[int]] = {}
-        for ci, cell in enumerate(self.workload.cells):
-            if self.cell_tile_idx[ci, hw_index] >= 0:
-                groups.setdefault(cell.stencil.name, []).append(ci)
-        for name, cis in groups.items():
-            st = self.workload.cells[cis[0]].stencil
-            sizes = np.array(
-                [
-                    (c.size.s1, c.size.s2, c.size.s3, c.size.t)
-                    for c in (self.workload.cells[ci] for ci in cis)
-                ],
-                np.float64,
-            )
+        feasible = [
+            ci
+            for ci in range(len(self.workload.cells))
+            if self.cell_tile_idx[ci, hw_index] >= 0
+        ]
+        for st, cis, sizes in _stencil_groups(self.workload, feasible).values():
             start = {ci: self.tiles_for(ci, hw_index) for ci in cis}
             sw0 = np.array(
                 [[start[ci][k] for k in sweep.SW_NAMES] for ci in cis],
@@ -216,6 +242,91 @@ class CodesignResult:
                     times[ci] = t_start[j]
                     tiles[ci] = start[ci]
         return times, tiles
+
+    # ---- artifact serialization (repro.service.store persistence hooks) ---
+    def artifact_payload(self) -> Tuple[dict, Dict[str, np.ndarray]]:
+        """(manifest, arrays) split for on-disk persistence.
+
+        The manifest is pure JSON (workload cells with full stencil specs,
+        GPU constants, the per-cell lattice tables); the arrays dict holds
+        the big matrices. :meth:`from_artifact_payload` inverts it exactly:
+        JSON round-trips float64 losslessly, so a reloaded result's
+        ``weighted_time``/``pareto`` are bit-identical.
+        """
+        unique: List[TileLattice] = []
+        lat_idx: List[int] = []
+        for lat in self.lattices:
+            if lat not in unique:
+                unique.append(lat)
+            lat_idx.append(unique.index(lat))
+        manifest = {
+            "workload": {
+                "name": self.workload.name,
+                "cells": [
+                    {
+                        "stencil": dataclasses.asdict(c.stencil),
+                        "size": {
+                            "s1": int(c.size.s1), "s2": int(c.size.s2),
+                            "t": int(c.size.t), "s3": int(c.size.s3),
+                        },
+                        "freq": float(c.freq),
+                        "lattice": lat_idx[i],
+                    }
+                    for i, c in enumerate(self.workload.cells)
+                ],
+            },
+            "gpu": dataclasses.asdict(self.gpu),
+            "lattices": [
+                {k: list(getattr(lat, k)) for k in ("t_s1", "t_s2", "t_t", "k", "t_s3")}
+                for lat in unique
+            ],
+        }
+        arrays = {
+            "cell_time": np.asarray(self.cell_time, np.float64),
+            "cell_tile_idx": np.asarray(self.cell_tile_idx, np.int64),
+            "hw_n_sm": np.asarray(self.hw.n_sm, np.float64),
+            "hw_n_v": np.asarray(self.hw.n_v, np.float64),
+            "hw_m_sm": np.asarray(self.hw.m_sm, np.float64),
+            "hw_area": np.asarray(self.hw.area, np.float64),
+        }
+        return manifest, arrays
+
+    @classmethod
+    def from_artifact_payload(
+        cls, manifest: dict, arrays: Dict[str, np.ndarray]
+    ) -> "CodesignResult":
+        """Rebuild a result from :meth:`artifact_payload` output. Array
+        values may be mmap-backed; they are used as-is (no copy)."""
+        from .timemodel import StencilSpec  # local: avoid cycle at import
+
+        lattices_tbl = [
+            TileLattice(**{k: tuple(int(x) for x in v) for k, v in d.items()})
+            for d in manifest["lattices"]
+        ]
+        cells = []
+        lattices: List[TileLattice] = []
+        for c in manifest["workload"]["cells"]:
+            st = StencilSpec(**c["stencil"])
+            sz = c["size"]
+            size = ProblemSize(s1=sz["s1"], s2=sz["s2"], t=sz["t"], s3=sz["s3"])
+            cells.append(WorkloadCell(st, size, c["freq"]))
+            lattices.append(lattices_tbl[c["lattice"]])
+        workload = Workload(manifest["workload"]["name"], tuple(cells))
+        gpu = GPUSpec(**manifest["gpu"])
+        hw = HardwareSpace(
+            n_sm=np.asarray(arrays["hw_n_sm"], np.float64),
+            n_v=np.asarray(arrays["hw_n_v"], np.float64),
+            m_sm=np.asarray(arrays["hw_m_sm"], np.float64),
+            area=np.asarray(arrays["hw_area"], np.float64),
+        )
+        return cls(
+            workload=workload,
+            gpu=gpu,
+            hw=hw,
+            cell_time=np.asarray(arrays["cell_time"]),
+            cell_tile_idx=np.asarray(arrays["cell_tile_idx"]),
+            lattices=lattices,
+        )
 
 
 #: below this many hardware points the jit compile cannot pay for itself;
@@ -263,26 +374,34 @@ def codesign(
     if hw is None:
         hw = enumerate_hw_space(area_model, max_area=max_area)
     eng = _resolve_engine(engine, len(hw))
-    if eng == "jax":
-        from .sweep import DEFAULT_CHUNK, sweep_cell
-
-        solver = sweep_cell
-        chunk = DEFAULT_CHUNK if chunk is None else chunk
-    else:
-        solver = solve_cell
-        chunk = 512 if chunk is None else chunk
     C, H = len(workload.cells), len(hw)
     cell_time = np.empty((C, H))
     cell_idx = np.empty((C, H), dtype=np.int64)
-    lattices: List[TileLattice] = []
-    for ci, cell in enumerate(workload.cells):
-        lat = lattice_3d if cell.stencil.dims == 3 else lattice_2d
-        lattices.append(lat)
-        t, i = solver(
-            cell.stencil, gpu, cell.size, hw.n_sm, hw.n_v, hw.m_sm, lat, chunk
-        )
-        cell_time[ci] = t
-        cell_idx[ci] = i
+    lattices: List[TileLattice] = [
+        lattice_3d if c.stencil.dims == 3 else lattice_2d for c in workload.cells
+    ]
+    if eng == "jax":
+        # one compiled dispatch per stencil family: all of a stencil's
+        # problem sizes ride the sweep's extra vmap axis (amortizes
+        # dispatch/launch overhead on accelerators; same argmins).
+        from .sweep import sweep_cells
+
+        for st, cis, sizes in _stencil_groups(workload).values():
+            t, i = sweep_cells(
+                st, gpu, sizes, hw.n_sm, hw.n_v, hw.m_sm, lattices[cis[0]], chunk
+            )
+            for j, ci in enumerate(cis):
+                cell_time[ci] = t[j]
+                cell_idx[ci] = i[j]
+    else:
+        np_chunk = 512 if chunk is None else chunk
+        for ci, cell in enumerate(workload.cells):
+            t, i = solve_cell(
+                cell.stencil, gpu, cell.size, hw.n_sm, hw.n_v, hw.m_sm,
+                lattices[ci], np_chunk,
+            )
+            cell_time[ci] = t
+            cell_idx[ci] = i
     return CodesignResult(workload, gpu, hw, cell_time, cell_idx, lattices)
 
 

@@ -10,7 +10,7 @@ from __future__ import annotations
 
 import numpy as np
 
-__all__ = ["pareto_mask", "pareto_front"]
+__all__ = ["pareto_mask", "pareto_mask_batched", "pareto_front"]
 
 
 def pareto_mask(cost: np.ndarray, perf: np.ndarray) -> np.ndarray:
@@ -36,6 +36,59 @@ def pareto_mask(cost: np.ndarray, perf: np.ndarray) -> np.ndarray:
         if perf[i] > best:
             mask[i] = True
             best = perf[i]
+    return mask
+
+
+def pareto_mask_batched(cost: np.ndarray, perf: np.ndarray) -> np.ndarray:
+    """Row-wise :func:`pareto_mask` for B perf vectors sharing one cost axis.
+
+    ``cost`` is ``(H,)``, ``perf`` is ``(B, H)``; returns a ``(B, H)`` bool
+    mask identical row-by-row to ``pareto_mask(cost, perf[b])``. The shared
+    cost axis is the codesign-service case (one hardware space, many
+    frequency mixes), and it is what makes the batch vectorizable: cost is
+    sorted once and the per-row scan collapses to a running-max over
+    equal-cost segments (``maximum.reduceat`` + ``maximum.accumulate``),
+    with no Python loop over B or H.
+    """
+    cost = np.asarray(cost, np.float64).ravel()
+    perf = np.atleast_2d(np.asarray(perf, np.float64))
+    if perf.shape[1] != cost.shape[0]:
+        raise ValueError("cost/perf shape mismatch")
+    b, n = perf.shape
+    mask = np.zeros((b, n), dtype=bool)
+    usable_cost = np.isfinite(cost)
+    idx = np.nonzero(usable_cost)[0]
+    if idx.size == 0:
+        return mask
+    order = idx[np.argsort(cost[idx], kind="stable")]  # cost asc, stable
+    cs = cost[order]
+    ps = perf[:, order]  # (B, K)
+    ps = np.where(np.isfinite(ps), ps, -np.inf)  # per-row non-finite perf
+    # equal-cost segments: within a segment only the best perf can win
+    seg_start = np.nonzero(np.r_[True, cs[1:] != cs[:-1]])[0]
+    seg_id = np.cumsum(np.r_[False, cs[1:] != cs[:-1]])
+    seg_max = np.maximum.reduceat(ps, seg_start, axis=1)  # (B, S)
+    # running best over *previous* segments (exclusive cumulative max)
+    run = np.maximum.accumulate(seg_max, axis=1)
+    prev = np.concatenate(
+        [np.full((b, 1), -np.inf), run[:, :-1]], axis=1
+    )  # (B, S)
+    seg_wins = seg_max > prev[:, : seg_max.shape[1]]
+    # the winner inside a segment is the FIRST position achieving seg_max
+    # (stable cost sort keeps original index order, matching pareto_mask's
+    # lexsort tie-breaking); np.maximum.reduceat has no arg variant, so
+    # find it with a segment-local == scan.
+    is_max = ps == seg_max[:, seg_id]
+    first_hit = np.zeros_like(is_max)
+    # positions where is_max first becomes True within each segment:
+    csum = np.cumsum(is_max, axis=1)
+    seg_base = np.concatenate(
+        [np.zeros((b, 1), csum.dtype), csum[:, seg_start[1:] - 1]], axis=1
+    )  # cumulative hits before each segment
+    first_hit = is_max & (csum - seg_base[:, seg_id] == 1)
+    winners = first_hit & seg_wins[:, seg_id] & np.isfinite(ps)
+    rows, cols = np.nonzero(winners)
+    mask[rows, order[cols]] = True
     return mask
 
 

@@ -10,8 +10,9 @@ and runs it on whatever backend is attached (CPU, GPU, TPU):
 * the time model itself is untouched -- :func:`repro.core.timemodel
   .stencil_time` is called with ``xp=jax.numpy``, so the NumPy path stays
   the bit-exact reference oracle (see ``tests/test_sweep.py``);
-* problem sizes are *dynamic* jit arguments: one compilation serves all 16
-  paper sizes of a stencil (the seed's sweep shape), instead of recompiling
+* problem sizes are *dynamic* jit arguments AND a batch (vmap) axis: all 16
+  paper sizes of a stencil solve in one compiled dispatch
+  (:func:`sweep_cells`), instead of recompiling -- or even re-dispatching --
   per cell;
 * an optional ``lax.map`` chunking knob bounds peak memory at
   ``chunk x |lattice|`` floats, for hardware spaces far larger than the
@@ -55,6 +56,7 @@ __all__ = [
     "HAVE_JAX",
     "DEFAULT_CHUNK",
     "sweep_cell",
+    "sweep_cells",
     "refine_points",
     "clear_caches",
 ]
@@ -120,23 +122,26 @@ def _traced_spec(dims: int, radius, c_iter, n_arrays) -> StencilSpec:
 
 
 @functools.lru_cache(maxsize=None)
-def _cell_solver(dims: int, gpu: GPUSpec, lattice: TileLattice, chunk: int):
-    """Compiled (hardware x lattice) argmin solver, shared per (dims, GPU,
-    lattice, chunk).
+def _cells_solver(dims: int, gpu: GPUSpec, lattice: TileLattice, chunk: int):
+    """Compiled (sizes x hardware x lattice) argmin solver, shared per
+    (dims, GPU, lattice, chunk).
 
     Returned callable:
-    ``(n_sm, n_v, m_sm, s1, s2, s3, t, radius, c_iter, n_arrays)
-    -> (best_t, best_i)`` over (H,) hardware arrays. Sizes and stencil
-    scalars are dynamic, so the whole six-stencil paper sweep compiles
-    exactly twice (2D + 3D); only a new H-shape retraces.
+    ``(n_sm, n_v, m_sm, sizes (P, 4), radius, c_iter, n_arrays)
+    -> (best_t (P, H), best_i (P, H))`` over (H,) hardware arrays. Sizes
+    and stencil scalars are dynamic jit arguments, and the size axis is an
+    extra vmap dimension: all P problem sizes of a stencil family sweep in
+    ONE dispatch (the seed looped Python-side, paying per-cell dispatch).
+    The whole six-stencil paper sweep still compiles exactly twice
+    (2D + 3D); only a new (P, H) shape pair retraces.
     """
     _require_jax()
     lat, keep_idx = _lattice_arrays(lattice, gpu)
     if keep_idx.shape[0] == 0:  # no candidate survives the static constraints
 
-        def solve_empty(n_sm, n_v, m_sm, s1, s2, s3, t, radius, c_iter, n_arrays):
-            h = n_sm.shape[0]
-            return jnp.full((h,), jnp.inf), jnp.full((h,), -1, jnp.int32)
+        def solve_empty(n_sm, n_v, m_sm, sizes, radius, c_iter, n_arrays):
+            p, h = sizes.shape[0], n_sm.shape[0]
+            return jnp.full((p, h), jnp.inf), jnp.full((p, h), -1, jnp.int32)
 
         return solve_empty
 
@@ -149,34 +154,85 @@ def _cell_solver(dims: int, gpu: GPUSpec, lattice: TileLattice, chunk: int):
             st, gpu, size, n_sm, n_v, m_sm, *lat, xp=jnp, dtype=jnp.float32
         )
 
-    def best_of(hw_chunk, size_scalars, st):
-        times = jax.vmap(lambda p: tile_times(p, size_scalars, st))(hw_chunk)
-        best_i = jnp.argmin(times, axis=1)
-        best_t = jnp.take_along_axis(times, best_i[:, None], axis=1)[:, 0]
+    def best_of(hw_chunk, sizes, st):
+        """(P, chunk) optima: vmap over sizes x vmap over hardware points."""
+        times = jax.vmap(
+            lambda sz: jax.vmap(
+                lambda p: tile_times(p, (sz[0], sz[1], sz[2], sz[3]), st)
+            )(hw_chunk)
+        )(sizes)  # (P, chunk, L)
+        best_i = jnp.argmin(times, axis=2)
+        best_t = jnp.take_along_axis(times, best_i[..., None], axis=2)[..., 0]
         # map back to seed lattice indices; -1 where nothing was feasible
         best_i = jnp.where(jnp.isfinite(best_t), keep_idx[best_i], -1)
         return best_t, best_i
 
     @jax.jit
-    def solve(n_sm, n_v, m_sm, s1, s2, s3, t, radius, c_iter, n_arrays):
+    def solve(n_sm, n_v, m_sm, sizes, radius, c_iter, n_arrays):
         st = _traced_spec(dims, radius, c_iter, n_arrays)
-        size_scalars = (s1, s2, s3, t)
         hw = jnp.stack([n_sm, n_v, m_sm], axis=1)  # (H, 3)
         h = hw.shape[0]
         if chunk <= 0 or h <= chunk:
-            return best_of(hw, size_scalars, st)
+            return best_of(hw, sizes, st)
         # pad to a chunk multiple, lax.map over (B, chunk, 3) slabs so peak
-        # memory is chunk x |lattice| regardless of |hardware space|.
+        # memory is P x chunk x |lattice| regardless of |hardware space|.
         b = -(-h // chunk)
         pad = b * chunk - h
         hw = jnp.concatenate([hw, jnp.broadcast_to(hw[:1], (pad, 3))], axis=0)
         best_t, best_i = lax.map(
-            lambda slab: best_of(slab, size_scalars, st),
+            lambda slab: best_of(slab, sizes, st),
             hw.reshape(b, chunk, 3),
-        )
-        return best_t.reshape(-1)[:h], best_i.reshape(-1)[:h]
+        )  # (B, P, chunk)
+        best_t = jnp.moveaxis(best_t, 0, 1).reshape(sizes.shape[0], -1)[:, :h]
+        best_i = jnp.moveaxis(best_i, 0, 1).reshape(sizes.shape[0], -1)[:, :h]
+        return best_t, best_i
 
     return solve
+
+
+def sweep_cells(
+    st: StencilSpec,
+    gpu: GPUSpec,
+    sizes: np.ndarray,
+    n_sm: np.ndarray,
+    n_v: np.ndarray,
+    m_sm: np.ndarray,
+    lattice: TileLattice | None = None,
+    chunk: int | None = None,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """All P problem sizes of one stencil in a single compiled dispatch.
+
+    ``sizes`` is a ``(P, 4)`` float array of ``(s1, s2, s3, t)`` rows (the
+    :data:`repro.core.workload.paper_sizes` grid packs 16 of them). Returns
+    ``(best_time (P, H), best_lattice_index (P, H))`` as float64/int64;
+    infeasible points get ``+inf`` / ``-1``. ``chunk=None`` scales the
+    hardware slab down by P so peak memory matches the single-size sweep.
+    """
+    _require_jax()
+    if lattice is None:
+        from .solver import LATTICE_2D, LATTICE_3D
+
+        lattice = LATTICE_3D if st.dims == 3 else LATTICE_2D
+    sizes = np.atleast_2d(np.asarray(sizes, np.float64))
+    if sizes.shape[1] != 4:
+        raise ValueError(f"sizes must be (P, 4) (s1, s2, s3, t); got {sizes.shape}")
+    if chunk is None:
+        chunk = max(1, DEFAULT_CHUNK // sizes.shape[0])
+    solve = _cells_solver(st.dims, gpu, lattice, int(chunk))
+    f32 = functools.partial(jnp.asarray, dtype=jnp.float32)
+    best_t, best_i = solve(
+        f32(np.asarray(n_sm).ravel()),
+        f32(np.asarray(n_v).ravel()),
+        f32(np.asarray(m_sm).ravel()),
+        f32(sizes),
+        f32(st.radius),
+        f32(st.c_iter),
+        f32(st.n_arrays),
+    )
+    return (
+        np.asarray(best_t, np.float64),
+        np.asarray(best_i, np.int64),
+    )
 
 
 def sweep_cell(
@@ -189,36 +245,19 @@ def sweep_cell(
     lattice: TileLattice | None = None,
     chunk: int = DEFAULT_CHUNK,
 ) -> Tuple[np.ndarray, np.ndarray]:
-    """Drop-in replacement for :func:`repro.core.solver.solve_cell`.
+    """Drop-in replacement for :func:`repro.core.solver.solve_cell` -- the
+    P=1 case of :func:`sweep_cells`.
 
     Returns ``(best_time (H,), best_lattice_index (H,))`` as float64/int64
     NumPy arrays; infeasible hardware points get ``+inf`` / ``-1``.
     Raises ``ModuleNotFoundError`` when jax is unavailable (use
     ``codesign(engine="auto")`` or the NumPy solver for soft fallback).
     """
-    _require_jax()
-    if lattice is None:
-        from .solver import LATTICE_2D, LATTICE_3D
-
-        lattice = LATTICE_3D if st.dims == 3 else LATTICE_2D
-    solve = _cell_solver(st.dims, gpu, lattice, int(chunk))
-    f32 = functools.partial(jnp.asarray, dtype=jnp.float32)
-    best_t, best_i = solve(
-        f32(np.asarray(n_sm).ravel()),
-        f32(np.asarray(n_v).ravel()),
-        f32(np.asarray(m_sm).ravel()),
-        f32(size.s1),
-        f32(size.s2),
-        f32(size.s3),
-        f32(size.t),
-        f32(st.radius),
-        f32(st.c_iter),
-        f32(st.n_arrays),
+    sizes = np.array([[size.s1, size.s2, size.s3, size.t]], np.float64)
+    best_t, best_i = sweep_cells(
+        st, gpu, sizes, n_sm, n_v, m_sm, lattice, int(chunk)
     )
-    return (
-        np.asarray(best_t, np.float64),
-        np.asarray(best_i, np.int64),
-    )
+    return best_t[0], best_i[0]
 
 
 # ---------------------------------------------------------------------------
@@ -335,5 +374,5 @@ def decode_sw(sw_row: np.ndarray) -> Dict[str, int]:
 
 def clear_caches() -> None:
     """Drop compiled solvers (mainly for tests/benchmarks timing cold starts)."""
-    _cell_solver.cache_clear()
+    _cells_solver.cache_clear()
     _refine_round.cache_clear()

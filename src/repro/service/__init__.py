@@ -1,0 +1,20 @@
+"""High-throughput codesign query service over precomputed sweep artifacts.
+
+The eq.-18 separability decomposition caches per-cell/per-hardware optima
+as a ``(cells x hardware)`` matrix; once persisted, every workload
+question is a cheap vectorized re-reduction ("sensitivity for free",
+paper §V.B). This package turns that observation into a serving system:
+
+* :mod:`repro.service.store`  -- versioned, content-addressed on-disk
+  artifacts (compressed npz + JSON manifest, mmap-backed lazy loads);
+* :mod:`repro.service.query`  -- ``QueryRequest -> QueryResponse``
+  re-reductions (mixes, top-k, Pareto, what-ifs) with an LRU;
+* :mod:`repro.service.server` -- thread-safe in-process server that
+  microbatches concurrent queries into one ``(B, C) @ (C, H)`` matmul and
+  falls back to the sweep engine exactly once on artifact miss;
+* :mod:`repro.service.cli`    -- ``python -m repro.service.cli query ...``.
+"""
+
+from .query import QueryEngine, QueryRequest, QueryResponse  # noqa: F401
+from .server import CodesignServer  # noqa: F401
+from .store import Artifact, ArtifactStore, artifact_spec, spec_key  # noqa: F401

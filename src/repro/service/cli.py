@@ -1,0 +1,193 @@
+"""Command-line front end for the codesign query service.
+
+Quickstart (first call sweeps once and persists the artifact; every later
+call -- any frequency mix, budget, what-if -- is a warm re-reduction):
+
+    python -m repro.service.cli query --stencil heat2d --max-area 450
+    python -m repro.service.cli query --freq heat2d=3 --freq jacobi2d=1 \\
+        --top-k 5 --pareto --fix n_sm=16
+    python -m repro.service.cli build --downsample 4     # pre-warm a store
+    python -m repro.service.cli ls
+
+The store location is ``--store``, else ``$REPRO_STORE``, else
+``~/.cache/repro/codesign-store``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+from .query import QueryRequest
+from .server import CodesignServer
+from .store import ArtifactStore
+
+DEFAULT_STORE = os.environ.get(
+    "REPRO_STORE", os.path.join(os.path.expanduser("~"), ".cache", "repro", "codesign-store")
+)
+
+
+def _add_server_args(p: argparse.ArgumentParser) -> None:
+    p.add_argument("--store", default=DEFAULT_STORE, help="artifact store directory")
+    p.add_argument("--max-hw-area", type=float, default=650.0,
+                   help="hardware-space enumeration budget (mm^2)")
+    p.add_argument("--downsample", type=int, default=1,
+                   help="keep every Nth hardware point (quick demos)")
+    p.add_argument("--engine", choices=("auto", "jax", "numpy"), default="auto")
+
+
+def _server(args) -> CodesignServer:
+    return CodesignServer(
+        ArtifactStore(args.store),
+        max_area=args.max_hw_area,
+        downsample=args.downsample,
+        engine=args.engine,
+        batch_window=0.0,  # CLI is single-threaded; no rendezvous needed
+    )
+
+
+def _freqs(args):
+    freqs = {}
+    for name in args.stencil or []:
+        freqs[name] = freqs.get(name, 0.0) + 1.0
+    for spec in args.freq or []:
+        name, _, w = spec.partition("=")
+        if not w:
+            raise SystemExit(f"--freq wants name=weight, got {spec!r}")
+        freqs[name] = freqs.get(name, 0.0) + float(w)
+    return freqs or None
+
+
+def _fix(args):
+    fix = {}
+    for spec in args.fix or []:
+        name, _, v = spec.partition("=")
+        if not v:
+            raise SystemExit(f"--fix wants param=value, got {spec!r}")
+        fix[name] = float(v)
+    return fix or None
+
+
+def cmd_query(args) -> None:
+    srv = _server(args)
+    was_warm = srv.warm
+    req = QueryRequest(
+        freqs=_freqs(args),
+        max_area=args.max_area,
+        min_area=args.min_area,
+        top_k=args.top_k,
+        pareto=args.pareto,
+        fix=_fix(args),
+    )
+    t0 = time.perf_counter()
+    resp = srv.query(req)
+    dt = time.perf_counter() - t0
+    feasible = resp.best_index >= 0
+    out = {
+        "artifact_key": resp.artifact_key,
+        "warm": was_warm,
+        "query_s": round(dt, 4),
+        "feasible": feasible,
+        "best": {**resp.best_point, "index": resp.best_index,
+                 "gflops": resp.best_gflops,
+                 "weighted_time_s": resp.best_weighted_time} if feasible else None,
+        "top_k": resp.top_k,
+    }
+    if resp.pareto_indices is not None:
+        out["pareto"] = {
+            "count": int(resp.pareto_indices.size),
+            "indices": [int(i) for i in resp.pareto_indices],
+        }
+    if resp.baseline_best_index is not None:
+        out["what_if"] = {
+            "baseline_best_index": resp.baseline_best_index,
+            "baseline_best_gflops": resp.baseline_best_gflops,
+            "delta_gflops": resp.best_gflops - resp.baseline_best_gflops,
+        }
+    if args.json:
+        json.dump(out, f := sys.stdout, indent=1)
+        f.write("\n")
+        return
+    b = out["best"]
+    print(f"artifact {resp.artifact_key} ({'warm' if was_warm else 'cold build'}), "
+          f"query {dt*1e3:.1f} ms")
+    if resp.best_index < 0:
+        print("no design satisfies the requested constraints "
+              "(budget/fix select an empty subspace)")
+        return
+    print(f"best:  n_SM={b['n_sm']:3d} n_V={b['n_v']:4d} M_SM={b['m_sm']:4.0f}kB "
+          f"area={b['area']:6.1f}mm^2  {b['gflops']:8.1f} GFLOP/s")
+    for r in resp.top_k[1:]:
+        print(f"       n_SM={r['n_sm']:3d} n_V={r['n_v']:4d} M_SM={r['m_sm']:4.0f}kB "
+              f"area={r['area']:6.1f}mm^2  {r['gflops']:8.1f} GFLOP/s")
+    if "pareto" in out:
+        print(f"pareto front: {out['pareto']['count']} of {len(srv.hw)} designs")
+    if "what_if" in out:
+        w = out["what_if"]
+        print(f"what-if delta vs unrestricted best: {w['delta_gflops']:+.1f} GFLOP/s")
+
+
+def cmd_build(args) -> None:
+    srv = _server(args)
+    t0 = time.perf_counter()
+    srv.ensure_artifact()
+    print(f"artifact {srv.key}: "
+          f"{'already stored' if srv.stats['artifact_loads'] else 'built'} "
+          f"({time.perf_counter()-t0:.1f}s, {len(srv.hw)} hw points, "
+          f"{len(srv.workload.cells)} cells)")
+
+
+def cmd_ls(args) -> None:
+    store = ArtifactStore(args.store)
+    rows = store.entries()
+    if not rows:
+        print(f"(no artifacts under {store.root})")
+        return
+    for r in rows:
+        print(f"{r['key']}  v{r['format_version']}  {r['workload']:16s} "
+              f"{r['cells']:4d} cells x {r['hw']:6d} hw  engine={r['engine']}  "
+              f"[{','.join(r['stencils'])}]")
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(
+        prog="repro.service.cli", description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter,
+    )
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    q = sub.add_parser("query", help="answer a codesign query (sweeps on first miss)")
+    _add_server_args(q)
+    q.add_argument("--stencil", action="append",
+                   help="stencil to weight 1.0 (repeatable)")
+    q.add_argument("--freq", action="append", metavar="NAME=W",
+                   help="explicit stencil weight (repeatable)")
+    q.add_argument("--max-area", type=float, default=np.inf,
+                   help="area budget for the answer (mm^2)")
+    q.add_argument("--min-area", type=float, default=0.0)
+    q.add_argument("--top-k", type=int, default=1)
+    q.add_argument("--pareto", action="store_true", help="include the Pareto front")
+    q.add_argument("--fix", action="append", metavar="PARAM=VALUE",
+                   help="what-if subspace, e.g. n_sm=16 (repeatable)")
+    q.add_argument("--json", action="store_true", help="machine-readable output")
+    q.set_defaults(fn=cmd_query)
+
+    b = sub.add_parser("build", help="pre-warm the default paper-workload artifact")
+    _add_server_args(b)
+    b.set_defaults(fn=cmd_build)
+
+    ls = sub.add_parser("ls", help="list stored artifacts")
+    ls.add_argument("--store", default=DEFAULT_STORE)
+    ls.set_defaults(fn=cmd_ls)
+
+    args = ap.parse_args(argv)
+    args.fn(args)
+
+
+if __name__ == "__main__":
+    main()

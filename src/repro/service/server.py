@@ -1,0 +1,197 @@
+"""Thread-safe in-process codesign query server.
+
+Decouples the expensive eq.-18 sweep (producer) from cheap workload
+queries (consumers):
+
+* **warm path**: the configured sweep's artifact is on disk -- queries are
+  answered by :class:`repro.service.query.QueryEngine` re-reductions and
+  NEVER invoke a sweep engine;
+* **miss path**: first touch runs ``codesign()`` once (under a build lock,
+  so a thundering herd compiles/solves exactly once) and writes the
+  artifact through the store for every later process;
+* **microbatching**: concurrent ``query()`` callers rendezvous for a short
+  window; the leader stacks every pending frequency vector into one
+  ``(B, cells) @ (cells, hw)`` matmul and distributes the rows. Amortizes
+  memory traffic over the big matrix exactly like batched inference.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from typing import Dict, List, Optional, Sequence
+
+from repro.core.area import LinearAreaModel, MAXWELL
+from repro.core.codesign import HardwareSpace, codesign, enumerate_hw_space
+from repro.core.solver import LATTICE_2D, LATTICE_3D, TileLattice
+from repro.core.timemodel import GPUSpec, MAXWELL_GPU
+from repro.core.workload import Workload, paper_workload
+
+from .query import QueryEngine, QueryRequest, QueryResponse
+from .store import ArtifactStore
+
+__all__ = ["CodesignServer"]
+
+
+class _Slot:
+    __slots__ = ("request", "event", "response", "error")
+
+    def __init__(self, request: QueryRequest):
+        self.request = request
+        self.event = threading.Event()
+        self.response: Optional[QueryResponse] = None
+        self.error: Optional[BaseException] = None
+
+
+class CodesignServer:
+    """Serve codesign queries for one configured sweep.
+
+    ``batch_window`` is the rendezvous time (seconds) the microbatch leader
+    waits for followers; 0 disables batching (every query answers solo,
+    still thread-safe). The default workload is the paper's Fig.-3
+    six-stencil uniform mix; ``downsample`` thins the hardware space for
+    demos/CI.
+    """
+
+    def __init__(
+        self,
+        store: ArtifactStore,
+        workload: Optional[Workload] = None,
+        gpu: GPUSpec = MAXWELL_GPU,
+        area_model: LinearAreaModel = MAXWELL,
+        max_area: float = 650.0,
+        hw: Optional[HardwareSpace] = None,
+        downsample: int = 1,
+        engine: str = "auto",
+        chunk: Optional[int] = None,
+        lattice_2d: TileLattice = LATTICE_2D,
+        lattice_3d: TileLattice = LATTICE_3D,
+        batch_window: float = 0.002,
+        lru_size: int = 256,
+    ):
+        self.store = store
+        self.workload = workload or paper_workload()
+        self.gpu = gpu
+        self.engine = engine
+        self.chunk = chunk
+        self.lattice_2d = lattice_2d
+        self.lattice_3d = lattice_3d
+        self.batch_window = float(batch_window)
+        self.lru_size = lru_size
+        if hw is None:
+            hw = enumerate_hw_space(area_model, max_area=max_area)
+            if downsample > 1:
+                hw = hw.downsample(downsample)
+        self.hw = hw
+        #: the artifact identity is known BEFORE any sweep runs -- that is
+        #: what makes the warm path engine-free.
+        self.key = store.key_for(
+            self.workload, gpu, self.hw, engine, lattice_2d, lattice_3d
+        )
+        self._engine: Optional[QueryEngine] = None
+        self._build_mu = threading.Lock()
+        self._batch_mu = threading.Lock()
+        self._pending: List[_Slot] = []
+        self._leader_active = False
+        self.stats: Dict[str, int] = {
+            "queries": 0,
+            "batches": 0,
+            "max_batch": 0,
+            "artifact_builds": 0,
+            "artifact_loads": 0,
+        }
+
+    # ---- artifact lifecycle ----------------------------------------------
+    def ensure_artifact(self) -> QueryEngine:
+        """Get-or-build the configured sweep's artifact (thread-safe)."""
+        eng = self._engine
+        if eng is not None:
+            return eng
+        with self._build_mu:
+            if self._engine is None:
+                art = self.store.get(self.key)
+                if art is None:
+                    result = codesign(
+                        self.workload,
+                        gpu=self.gpu,
+                        hw=self.hw,
+                        lattice_2d=self.lattice_2d,
+                        lattice_3d=self.lattice_3d,
+                        chunk=self.chunk,
+                        engine=self.engine,
+                    )
+                    art = self.store.put(
+                        result,
+                        engine=self.engine,
+                        lattice_2d=self.lattice_2d,
+                        lattice_3d=self.lattice_3d,
+                    )
+                    assert art.key == self.key, "store key drifted from server key"
+                    self.stats["artifact_builds"] += 1
+                else:
+                    self.stats["artifact_loads"] += 1
+                self._engine = QueryEngine(art, lru_size=self.lru_size)
+            return self._engine
+
+    @property
+    def warm(self) -> bool:
+        """True when queries can be served without any sweep engine."""
+        return self._engine is not None or self.store.has(self.key)
+
+    # ---- queries ----------------------------------------------------------
+    def query(self, request: QueryRequest) -> QueryResponse:
+        """Answer one request; concurrent callers microbatch automatically."""
+        engine = self.ensure_artifact()
+        if self.batch_window <= 0:
+            with self._batch_mu:
+                self.stats["queries"] += 1
+                self.stats["batches"] += 1
+                self.stats["max_batch"] = max(self.stats["max_batch"], 1)
+            return engine.query(request)
+        slot = _Slot(request)
+        with self._batch_mu:
+            self._pending.append(slot)
+            am_leader = not self._leader_active
+            if am_leader:
+                self._leader_active = True
+        if am_leader:
+            try:
+                time.sleep(self.batch_window)  # rendezvous: followers pile in
+            finally:
+                # even if the sleep is interrupted (KeyboardInterrupt), the
+                # leadership MUST be handed back and every collected
+                # follower answered or failed -- never left waiting forever
+                with self._batch_mu:
+                    batch, self._pending = self._pending, []
+                    self._leader_active = False
+                    self.stats["queries"] += len(batch)
+                    self.stats["batches"] += 1
+                    self.stats["max_batch"] = max(self.stats["max_batch"], len(batch))
+                try:
+                    responses = engine.answer_many([s.request for s in batch])
+                    for s, r in zip(batch, responses):
+                        s.response = r
+                except BaseException:  # noqa: BLE001 -- isolate the bad request
+                    for s in batch:  # retry solo so one poison pill can't
+                        try:  # take down its batchmates
+                            s.response = engine.query(s.request)
+                        except BaseException as e:  # noqa: BLE001
+                            s.error = e
+                finally:
+                    for s in batch:
+                        s.event.set()
+        slot.event.wait()
+        if slot.error is not None:
+            raise slot.error
+        assert slot.response is not None
+        return slot.response
+
+    def query_many(self, requests: Sequence[QueryRequest]) -> List[QueryResponse]:
+        """Batch entry point for a caller that already has its requests in
+        hand (no rendezvous window needed)."""
+        engine = self.ensure_artifact()
+        with self._batch_mu:
+            self.stats["queries"] += len(requests)
+            self.stats["batches"] += 1
+            self.stats["max_batch"] = max(self.stats["max_batch"], len(requests))
+        return engine.answer_many(list(requests))

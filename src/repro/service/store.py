@@ -1,0 +1,326 @@
+"""Versioned on-disk artifact store for eq.-18 sweep results.
+
+The separability decomposition makes the ``(cells x hardware)`` optima
+matrix the unit of reuse: every §V.B analysis (re-weighted mixes, top-k
+under an area budget, Pareto fronts, what-if subspaces) is a cheap
+re-reduction over it. This module persists :class:`repro.core.codesign
+.CodesignResult` so that reuse survives the process:
+
+* one directory per artifact: ``manifest.json`` (workload cells with full
+  stencil specs, GPU constants, lattices, shapes, spec) + ``cell_time.npy``
+  (the big (C, H) float64 matrix, written raw so it can be **memory-mapped**
+  on load) + ``arrays.npz`` (compressed: tile argmins and the hardware-space
+  columns);
+* **content-addressed keys**: sha256 over a canonical-JSON spec of
+  (stencil set incl. numeric model constants, size grid, hardware-space
+  digest, GPU constants, lattices, engine, format version). Same question
+  -> same key; any change to the inputs that could change the matrix ->
+  a different key (see ``tests/test_service.py``);
+* lazy loading: :class:`Artifact` reads the manifest eagerly (small JSON)
+  and materializes arrays on first attribute access -- ``cell_time`` as an
+  ``mmap_mode="r"`` view, the npz members on demand;
+* atomic writes: artifacts are staged in a temp directory and renamed into
+  place, so readers never observe a half-written artifact.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import shutil
+import tempfile
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core.codesign import CodesignResult, HardwareSpace
+from repro.core.solver import LATTICE_2D, LATTICE_3D, TileLattice
+from repro.core.timemodel import GPUSpec
+from repro.core.workload import Workload
+
+__all__ = ["FORMAT_VERSION", "Artifact", "ArtifactStore", "artifact_spec", "spec_key"]
+
+#: bump when the on-disk layout or the solver semantics change; old
+#: artifacts then read as misses (the store rebuilds, never mis-serves).
+FORMAT_VERSION = 1
+
+
+def _canonical_json(obj) -> str:
+    return json.dumps(obj, sort_keys=True, separators=(",", ":"))
+
+
+def _array_digest(*arrays: np.ndarray) -> str:
+    h = hashlib.sha256()
+    for a in arrays:
+        a = np.ascontiguousarray(np.asarray(a, np.float64))
+        h.update(str(a.shape).encode())
+        h.update(a.tobytes())
+    return h.hexdigest()
+
+
+def artifact_spec(
+    workload: Workload,
+    gpu: GPUSpec,
+    hw: HardwareSpace,
+    engine: str,
+    lattice_2d: TileLattice = LATTICE_2D,
+    lattice_3d: TileLattice = LATTICE_3D,
+) -> dict:
+    """The content-address identity of a sweep, computable WITHOUT running
+    it. Frequencies are deliberately excluded: the stored matrix serves
+    every mix, so re-weighting must not change the key."""
+    lat_d = lambda lat: {k: list(getattr(lat, k)) for k in ("t_s1", "t_s2", "t_t", "k", "t_s3")}
+    return {
+        "format_version": FORMAT_VERSION,
+        "stencils": sorted(
+            {c.stencil.name: dataclasses.asdict(c.stencil) for c in workload.cells}.values(),
+            key=lambda d: d["name"],
+        ),
+        "cells": [
+            [c.stencil.name, int(c.size.s1), int(c.size.s2), int(c.size.s3), int(c.size.t)]
+            for c in workload.cells
+        ],
+        "gpu": dataclasses.asdict(gpu),
+        "hw_digest": _array_digest(hw.n_sm, hw.n_v, hw.m_sm, hw.area),
+        "n_hw": len(hw),
+        "lattices": {"2d": lat_d(lattice_2d), "3d": lat_d(lattice_3d)},
+        "engine": engine,
+    }
+
+
+def spec_key(spec: dict) -> str:
+    return hashlib.sha256(_canonical_json(spec).encode()).hexdigest()[:20]
+
+
+class Artifact:
+    """Lazy read handle over one stored sweep.
+
+    The manifest is loaded eagerly; ``cell_time`` is an mmap-backed view
+    materialized on first access (queries that never touch a row never page
+    it in), and the smaller arrays decompress from the npz on demand.
+    """
+
+    def __init__(self, path: str):
+        self.path = path
+        with open(os.path.join(path, "manifest.json")) as f:
+            self.manifest = json.load(f)
+        self.key: str = self.manifest["key"]
+        self._cell_time: Optional[np.ndarray] = None
+        self._npz = None
+        self._cache: Dict[str, np.ndarray] = {}
+
+    # ---- shapes / metadata ------------------------------------------------
+    @property
+    def n_cells(self) -> int:
+        return int(self.manifest["shapes"]["cells"])
+
+    @property
+    def n_hw(self) -> int:
+        return int(self.manifest["shapes"]["hw"])
+
+    @property
+    def stencil_names(self) -> List[str]:
+        seen: Dict[str, None] = {}
+        for c in self.manifest["workload"]["cells"]:
+            seen.setdefault(c["stencil"]["name"])
+        return list(seen)
+
+    def cell_freqs(self) -> np.ndarray:
+        return np.array(
+            [c["freq"] for c in self.manifest["workload"]["cells"]], np.float64
+        )
+
+    def cell_flops(self) -> np.ndarray:
+        out = np.empty(self.n_cells, np.float64)
+        for i, c in enumerate(self.manifest["workload"]["cells"]):
+            sz = c["size"]
+            points = float(sz["s1"]) * sz["s2"] * sz["s3"] * sz["t"]
+            out[i] = c["stencil"]["flops_per_point"] * points
+        return out
+
+    # ---- arrays -----------------------------------------------------------
+    @property
+    def cell_time(self) -> np.ndarray:
+        if self._cell_time is None:
+            self._cell_time = np.load(
+                os.path.join(self.path, "cell_time.npy"), mmap_mode="r"
+            )
+        return self._cell_time
+
+    def _arr(self, name: str) -> np.ndarray:
+        if name not in self._cache:
+            if self._npz is None:
+                self._npz = np.load(os.path.join(self.path, "arrays.npz"))
+            self._cache[name] = self._npz[name]
+        return self._cache[name]
+
+    @property
+    def cell_tile_idx(self) -> np.ndarray:
+        return self._arr("cell_tile_idx")
+
+    @property
+    def hw_n_sm(self) -> np.ndarray:
+        return self._arr("hw_n_sm")
+
+    @property
+    def hw_n_v(self) -> np.ndarray:
+        return self._arr("hw_n_v")
+
+    @property
+    def hw_m_sm(self) -> np.ndarray:
+        return self._arr("hw_m_sm")
+
+    @property
+    def hw_area(self) -> np.ndarray:
+        return self._arr("hw_area")
+
+    def hw_column(self, name: str) -> np.ndarray:
+        """Hardware-space column by design-parameter name (what-if filters)."""
+        cols = {"n_sm": self.hw_n_sm, "n_v": self.hw_n_v, "m_sm": self.hw_m_sm,
+                "area": self.hw_area}
+        if name not in cols:
+            raise KeyError(f"unknown hardware parameter {name!r} (want one of {sorted(cols)})")
+        return cols[name]
+
+    def point(self, i: int) -> Dict[str, float]:
+        return {
+            "n_sm": int(self.hw_n_sm[i]),
+            "n_v": int(self.hw_n_v[i]),
+            "m_sm": float(self.hw_m_sm[i]),
+            "area": float(self.hw_area[i]),
+        }
+
+    def to_result(self) -> CodesignResult:
+        """Materialize the full in-process object (round-trip inverse of
+        :meth:`ArtifactStore.put`)."""
+        arrays = {
+            "cell_time": self.cell_time,
+            "cell_tile_idx": self.cell_tile_idx,
+            "hw_n_sm": self.hw_n_sm,
+            "hw_n_v": self.hw_n_v,
+            "hw_m_sm": self.hw_m_sm,
+            "hw_area": self.hw_area,
+        }
+        return CodesignResult.from_artifact_payload(self.manifest, arrays)
+
+
+class ArtifactStore:
+    """Directory of content-addressed sweep artifacts."""
+
+    def __init__(self, root: str):
+        self.root = os.path.abspath(root)
+        os.makedirs(self.root, exist_ok=True)
+
+    # ---- keys -------------------------------------------------------------
+    def key_for(
+        self,
+        workload: Workload,
+        gpu: GPUSpec,
+        hw: HardwareSpace,
+        engine: str = "auto",
+        lattice_2d: TileLattice = LATTICE_2D,
+        lattice_3d: TileLattice = LATTICE_3D,
+    ) -> str:
+        return spec_key(
+            artifact_spec(workload, gpu, hw, engine, lattice_2d, lattice_3d)
+        )
+
+    def _path(self, key: str) -> str:
+        return os.path.join(self.root, key)
+
+    def has(self, key: str) -> bool:
+        return self.get(key) is not None
+
+    def get(self, key: str) -> Optional[Artifact]:
+        """None on miss OR format-version mismatch (stale artifacts are
+        invisible, never mis-served)."""
+        path = self._path(key)
+        if not os.path.exists(os.path.join(path, "manifest.json")):
+            return None
+        art = Artifact(path)
+        if art.manifest.get("format_version") != FORMAT_VERSION:
+            return None
+        return art
+
+    def put(
+        self,
+        result: CodesignResult,
+        engine: str = "auto",
+        extra: Optional[dict] = None,
+        lattice_2d: Optional[TileLattice] = None,
+        lattice_3d: Optional[TileLattice] = None,
+    ) -> Artifact:
+        """Persist a sweep result; returns the (re)loaded lazy handle.
+
+        Writes are staged and renamed into place, so a concurrent reader
+        sees either nothing or the whole artifact; a concurrent writer of
+        the same key loses the rename race benignly (same content).
+        ``lattice_2d``/``lattice_3d`` pin the key's lattice tables when the
+        workload exercises only one dimensionality (otherwise inferred from
+        the result's per-cell lattices, falling back to the defaults)."""
+        lat2 = lattice_2d or next(
+            (lat for lat in result.lattices if len(lat.t_s3) == 1), LATTICE_2D
+        )
+        lat3 = lattice_3d or next(
+            (lat for lat in result.lattices if len(lat.t_s3) > 1), LATTICE_3D
+        )
+        spec = artifact_spec(result.workload, result.gpu, result.hw, engine, lat2, lat3)
+        key = spec_key(spec)
+        manifest, arrays = result.artifact_payload()
+        manifest.update(
+            format_version=FORMAT_VERSION,
+            key=key,
+            spec=spec,
+            engine=engine,
+            shapes={"cells": int(arrays["cell_time"].shape[0]),
+                    "hw": int(arrays["cell_time"].shape[1])},
+            extra=extra or {},
+        )
+        tmp = tempfile.mkdtemp(prefix=f".stage-{key}-", dir=self.root)
+        try:
+            np.save(os.path.join(tmp, "cell_time.npy"), arrays["cell_time"])
+            np.savez_compressed(
+                os.path.join(tmp, "arrays.npz"),
+                **{k: v for k, v in arrays.items() if k != "cell_time"},
+            )
+            with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                json.dump(manifest, f, indent=1)
+            try:
+                os.replace(tmp, self._path(key))
+            except OSError:
+                if not os.path.exists(os.path.join(self._path(key), "manifest.json")):
+                    raise  # real failure, not a lost same-key race
+        finally:
+            if os.path.exists(tmp):
+                shutil.rmtree(tmp, ignore_errors=True)
+        art = self.get(key)
+        assert art is not None
+        return art
+
+    def keys(self) -> List[str]:
+        return sorted(
+            d for d in os.listdir(self.root)
+            if os.path.exists(os.path.join(self.root, d, "manifest.json"))
+            and not d.startswith(".")
+        )
+
+    def entries(self) -> List[Dict]:
+        """One summary row per stored artifact (the CLI's ``ls``)."""
+        out = []
+        for k in self.keys():
+            art = Artifact(self._path(k))
+            m = art.manifest
+            out.append(
+                {
+                    "key": k,
+                    "format_version": m.get("format_version"),
+                    "workload": m["workload"]["name"],
+                    "stencils": art.stencil_names,
+                    "cells": m["shapes"]["cells"],
+                    "hw": m["shapes"]["hw"],
+                    "engine": m.get("engine"),
+                }
+            )
+        return out

@@ -65,6 +65,50 @@ def test_sweep_matches_numpy_oracle(name, size, lattice):
     assert_argmin_equivalent(st, size, lattice, hw, t_np, i_np, t_jax, i_jax)
 
 
+def test_sweep_cells_batches_all_sizes_in_one_dispatch():
+    """The extra vmap axis: a (P, 4) size batch must reproduce P separate
+    sweep_cell calls exactly, for every chunking regime (incl. the scaled
+    default and a chunk that does not divide H)."""
+    from repro.core.workload import paper_sizes
+
+    st = STENCILS["heat2d"]
+    hw = small_hw(step=13)  # not a multiple of any chunk below
+    sizes = np.array(
+        [(s.s1, s.s2, s.s3, s.t) for s in paper_sizes(st.dims)], np.float64
+    )
+    refs = [
+        sweep.sweep_cell(
+            st, MAXWELL_GPU, ProblemSize(s1=r[0], s2=r[1], t=r[3], s3=r[2]),
+            hw.n_sm, hw.n_v, hw.m_sm, LATTICE_2D,
+        )
+        for r in sizes
+    ]
+    for chunk in (None, 7, 0):
+        t, i = sweep.sweep_cells(
+            st, MAXWELL_GPU, sizes, hw.n_sm, hw.n_v, hw.m_sm, LATTICE_2D, chunk
+        )
+        assert t.shape == (len(sizes), len(hw))
+        for p, (t_ref, i_ref) in enumerate(refs):
+            np.testing.assert_allclose(t[p], t_ref, rtol=0)
+            np.testing.assert_array_equal(i[p], i_ref)
+
+
+def test_codesign_jax_groups_match_oracle_per_cell():
+    """The driver's one-dispatch-per-stencil-family path must equal the
+    NumPy per-cell oracle on the full multi-size workload."""
+    wl = paper_workload(["heat2d", "heat3d"], name="grouped")
+    hw = small_hw(step=48)
+    res_jax = codesign(wl, hw=hw, engine="jax")
+    res_np = codesign(wl, hw=hw, engine="numpy")
+    assert np.array_equal(
+        np.isfinite(res_jax.cell_time), np.isfinite(res_np.cell_time)
+    )
+    feas = np.isfinite(res_np.cell_time)
+    np.testing.assert_allclose(
+        res_jax.cell_time[feas], res_np.cell_time[feas], rtol=RTOL
+    )
+
+
 def test_chunking_is_invisible():
     """lax.map slab size (incl. padding remainders) must not change results."""
     st = STENCILS["jacobi2d"]
