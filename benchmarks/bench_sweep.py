@@ -1,10 +1,19 @@
-"""NumPy chunked sweep vs compiled JAX sweep engine on the Fig.-3 workload.
+"""NumPy chunked sweep vs compiled JAX sweep engines on the Fig.-3 workload.
 
 Times the full eq.-(18) solve (every workload cell x every feasible
-hardware point) once per engine and reports the wall-time ratio, plus a
-cell-by-cell argmin equivalence check so the speedup is never bought with
-a wrong answer. The JAX number includes compilation (cold start); a warm
-second pass is reported separately to show the steady-state gap.
+hardware point) once per engine -- NumPy oracle, single-device JAX, and
+the shard_map multi-device engine -- and reports the wall-time ratios,
+plus a cell-by-cell argmin equivalence check so the speedup is never
+bought with a wrong answer (the sharded engine must be *bit-identical* to
+the single-device one). Compiled numbers include compilation (cold
+start); a warm second pass is reported separately to show the
+steady-state gap. The per-engine wall times + device count land in the
+repo-root ``BENCH_sweep.json`` trajectory via ``benchmarks/run.py``.
+
+On a CPU host, ``XLA_FLAGS=--xla_force_host_platform_device_count=8``
+(set before jax initializes) exercises the real multi-device path; the
+scaling-efficiency number is only meaningful when the forced devices map
+to real cores.
 """
 
 from __future__ import annotations
@@ -38,11 +47,13 @@ def _equivalent(res_np, res_jax) -> float:
     return float(np.max(gap / res_np.cell_time[finite]))
 
 
-def _refine_stage(cls: str, res) -> None:
+def _refine_stage(cls: str, res) -> dict:
     """Polish the reported best design with the batched coordinate descent
     (CodesignResult.refine) and land the speedup/quality delta in the
     artifact JSON -- the refine trajectory is now part of the tracked
-    benchmark surface, not just a test fixture."""
+    benchmark surface, not just a test fixture. The whole descent is one
+    ``lax.while_loop`` dispatch (a single device->host sync), so refine_s
+    here tracks the win over the old per-round blocking convergence check."""
     i, g0 = res.best(max_area=650.0)
     wt0 = float(res.weighted_time()[i])
     t0 = time.perf_counter()
@@ -76,16 +87,27 @@ def _refine_stage(cls: str, res) -> None:
     # re-evaluation -- allow the cross-engine noise bound (same RTOL as the
     # equivalence tests), not a bitwise comparison
     assert wt1 <= wt0 * (1 + 1e-5), "refine regressed the lattice optimum"
+    return rec
 
 
-def run() -> None:
+def run() -> dict | None:
+    """Run the engine comparison; returns the trajectory record that
+    ``benchmarks/run.py`` appends to the repo-root ``BENCH_sweep.json``."""
     if not sweep.HAVE_JAX:
         emit("sweep_engine", 0.0, "skipped (jax not installed)")
-        return
+        return None
+    n_dev = sweep.device_count()
+    # the 1-device mesh is the degenerate case (same program as "jax", and
+    # tests/test_sweep_sharded.py already pins its bit-identity): timing it
+    # would double the compiled-engine cost of the single-device smoke lane
+    # for no signal. The CI sharded lane forces 8 host devices.
+    run_sharded = n_dev > 1 and sweep.HAVE_SHARD_MAP
     hw = enumerate_hw_space(MAXWELL, max_area=650.0)
     if smoke():
         hw = hw.downsample(SMOKE_HW_STRIDE)
-    total_np = total_jax = 0.0
+    totals = {"numpy": 0.0, "jax_cold": 0.0, "jax_warm": 0.0,
+              "sharded_cold": 0.0, "sharded_warm": 0.0}
+    classes: dict = {}
     for cls, names in CLASSES.items():
         wl = paper_workload(names, name=f"sweep-{cls}")
         sweep.clear_caches()  # honest cold start: compile time is charged
@@ -98,24 +120,95 @@ def run() -> None:
         codesign(wl, hw=hw, engine="jax")
         t_warm = time.perf_counter() - t0
 
+        if run_sharded:
+            t0 = time.perf_counter()
+            res_sh = codesign(wl, hw=hw, engine="sharded")
+            t_sh_cold = time.perf_counter() - t0
+
+            t0 = time.perf_counter()
+            codesign(wl, hw=hw, engine="sharded")
+            t_sh_warm = time.perf_counter() - t0
+
         t0 = time.perf_counter()
         res_np = codesign(wl, hw=hw, engine="numpy")
         t_np = time.perf_counter() - t0
 
         gap = _equivalent(res_np, res_jax)
-        total_np += t_np
-        total_jax += t_cold
+        assert gap < 1e-5, f"engines diverged on {cls}: {gap}"
+        totals["numpy"] += t_np
+        totals["jax_cold"] += t_cold
+        totals["jax_warm"] += t_warm
+        classes[cls] = {
+            "cells": len(wl.cells), "hw": len(hw), "numpy_s": round(t_np, 4),
+            "jax_cold_s": round(t_cold, 4), "jax_warm_s": round(t_warm, 4),
+        }
         emit(
             f"sweep_{cls}", t_cold * 1e6,
             f"{len(wl.cells)} cells x {len(hw)} hw: numpy {t_np:.1f}s, "
             f"jax cold {t_cold:.1f}s ({t_np/t_cold:.1f}x) / warm {t_warm:.1f}s "
             f"({t_np/t_warm:.1f}x); max argmin gap {gap:.1e}",
         )
-        assert gap < 1e-5, f"engines diverged on {cls}: {gap}"
+        if run_sharded:
+            # the sharded engine runs the same compiled body per shard: any
+            # difference from the single-device engine is a sharding bug,
+            # so the bar is bit-identity, not a tolerance.
+            assert np.array_equal(res_sh.cell_time, res_jax.cell_time) and (
+                np.array_equal(res_sh.cell_tile_idx, res_jax.cell_tile_idx)
+            ), f"sharded engine not bit-identical on {cls}"
+            totals["sharded_cold"] += t_sh_cold
+            totals["sharded_warm"] += t_sh_warm
+            classes[cls]["sharded_cold_s"] = round(t_sh_cold, 4)
+            classes[cls]["sharded_warm_s"] = round(t_sh_warm, 4)
+            emit(
+                f"sweep_sharded_{cls}", t_sh_cold * 1e6,
+                f"{n_dev} device(s): cold {t_sh_cold:.1f}s / warm "
+                f"{t_sh_warm:.1f}s ({t_warm/t_sh_warm:.2f}x vs single-device "
+                f"warm); bit-identical",
+            )
         if refine_enabled():
-            _refine_stage(cls, res_jax)
+            r = _refine_stage(cls, res_jax)
+            classes[cls]["refine_s"] = r["refine_s"]
+            classes[cls]["refine_quality_delta_pct"] = round(
+                r["quality_delta_pct"], 4
+            )
     emit(
-        "sweep_total", total_jax * 1e6,
-        f"numpy {total_np:.1f}s vs jax {total_jax:.1f}s cold incl. compile "
-        f"-> {total_np/total_jax:.1f}x",
+        "sweep_total", totals["jax_cold"] * 1e6,
+        f"numpy {totals['numpy']:.1f}s vs jax {totals['jax_cold']:.1f}s cold "
+        f"incl. compile -> {totals['numpy']/totals['jax_cold']:.1f}x",
     )
+    if not run_sharded:
+        for k in ("sharded_cold", "sharded_warm"):
+            del totals[k]  # never timed; zeros would read as measurements
+    rec = {
+        "suite": "sweep",
+        "smoke": smoke(),
+        "device_count": n_dev,
+        "hw_points": len(hw),
+        "classes": classes,
+        "engines_total_s": {k: round(v, 4) for k, v in totals.items()},
+    }
+    if run_sharded:
+        # scaling efficiency: warm speedup over the single-device engine
+        # per mesh device. 1.0 = perfect linear scaling; meaningful only
+        # when the devices are real (forced host devices share cores).
+        speedup = totals["jax_warm"] / max(totals["sharded_warm"], 1e-9)
+        efficiency = speedup / max(n_dev, 1)
+        emit(
+            "sweep_sharded_total", totals["sharded_cold"] * 1e6,
+            f"{n_dev} device(s): warm {totals['sharded_warm']:.1f}s vs "
+            f"single-device warm {totals['jax_warm']:.1f}s -> {speedup:.2f}x "
+            f"({100 * efficiency:.0f}% scaling efficiency)",
+        )
+        rec["sharded_speedup_vs_jax_warm"] = round(speedup, 4)
+        rec["scaling_efficiency"] = round(efficiency, 4)
+    else:
+        why = (
+            "this jax lacks shard_map"
+            if not sweep.HAVE_SHARD_MAP
+            else f"{n_dev} device(s); needs a multi-device mesh"
+        )
+        emit(
+            "sweep_sharded_total", 0.0,
+            f"skipped ({why} -- see the CI sharded-smoke lane)",
+        )
+    return rec

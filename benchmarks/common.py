@@ -4,12 +4,15 @@ the whole suite is CI-runnable in minutes)."""
 
 from __future__ import annotations
 
+import datetime
 import json
 import os
 import time
 from typing import Callable, Dict
 
 ARTIFACTS = os.path.join(os.path.dirname(__file__), "artifacts")
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 #: hardware-space downsampling stride used by suites in smoke mode.
 SMOKE_HW_STRIDE = 8
@@ -54,6 +57,34 @@ def timed(fn: Callable, *args, repeats: int = 3, **kw):
 def emit(name: str, us_per_call: float, derived: str) -> None:
     """The harness CSV contract: name,us_per_call,derived."""
     print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def append_trajectory(name: str, record: Dict) -> str:
+    """Append a timestamped entry to the repo-root ``BENCH_<name>.json``
+    perf trajectory (a JSON list, one entry per recorded run), so wall-time
+    regressions are diffable across PRs. Returns the file path.
+
+    Unlike :func:`cache_json` artifacts (scratch outputs under
+    ``benchmarks/artifacts/``), the trajectory is a *committed* file: each
+    PR's benchmark run extends it in place."""
+    path = os.path.join(REPO_ROOT, f"BENCH_{name}.json")
+    entries = []
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                entries = json.load(f)
+        except (json.JSONDecodeError, OSError):
+            entries = []  # corrupt trajectory: restart rather than crash
+    if not isinstance(entries, list):
+        entries = []
+    entries.append(
+        {"ts": datetime.datetime.now(datetime.timezone.utc).isoformat(), **record}
+    )
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(entries, f, indent=1)
+    os.replace(tmp, path)
+    return path
 
 
 def cache_json(key: str, compute: Callable[[], Dict], force: bool = False) -> Dict:

@@ -97,10 +97,20 @@ def main() -> None:
         if args.only and args.only != name:
             continue
         try:
-            mod.run()
+            rec = mod.run()
         except Exception:  # noqa: BLE001
             failed.append(name)
             traceback.print_exc()
+            continue
+        if isinstance(rec, dict) and "suite" in rec:
+            # repo-root perf trajectory: any suite returning a record dict
+            # (currently sweep: per-engine wall times + device count) gets
+            # a timestamped BENCH_<suite>.json entry, committed so
+            # regressions are diffable across PRs.
+            from .common import append_trajectory
+
+            path = append_trajectory(rec["suite"], rec)
+            print(f"# trajectory entry appended to {path}", file=sys.stderr)
     if failed:
         print(f"FAILED suites: {failed}", file=sys.stderr)
         raise SystemExit(1)

@@ -18,7 +18,9 @@ from repro.core.workload import paper_workload
 
 ap = argparse.ArgumentParser()
 ap.add_argument("--fast", action="store_true")
-ap.add_argument("--engine", choices=("auto", "jax", "numpy"), default="auto")
+ap.add_argument(
+    "--engine", choices=("auto", "jax", "sharded", "numpy"), default="auto"
+)
 args = ap.parse_args()
 
 for cls, names in (

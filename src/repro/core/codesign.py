@@ -7,14 +7,18 @@ cached as a ``(cells x hardware)`` matrix, the §V.B "workload sensitivity
 for free" analyses (re-weighting frequencies, single-stencil workloads)
 are simple matrix re-reductions -- no re-solving.
 
-The inner solves run on one of two engines:
+The inner solves run on one of three engines:
 
 * ``"jax"`` -- the compiled sweep of :mod:`repro.core.sweep` (jitted vmap
   over hardware x tile lattice; CPU/GPU/TPU); the default whenever jax is
   importable and the hardware space is big enough to amortize compilation;
+* ``"sharded"`` -- the same fused body with the hardware axis partitioned
+  over a 1-D device mesh (``shard_map`` + ``NamedSharding``); bit-identical
+  to ``"jax"`` and the ``engine="auto"`` promotion whenever more than one
+  device is attached (the ``devices=`` knob picks the mesh);
 * ``"numpy"`` -- the seed's chunked-broadcast reference solver
   (:func:`repro.core.solver.solve_cell`), kept bit-exact as the oracle the
-  jax engine is equivalence-tested against.
+  jax engines are equivalence-tested against.
 """
 
 from __future__ import annotations
@@ -334,9 +338,27 @@ class CodesignResult:
 _AUTO_MIN_HW = 64
 
 
-def _resolve_engine(engine: str, n_hw: int) -> str:
-    if engine not in ("auto", "jax", "numpy"):
-        raise ValueError(f"unknown engine {engine!r} (want auto|jax|numpy)")
+def _devices_engine(engine: str, devices) -> str:
+    """An explicit device selection IS a request for the mesh engine:
+    promote auto (even below the numpy floor -- the caller knows their
+    mesh) and reject engines that would silently drop the knob. Cheap
+    (never touches jax), so key-time callers can share the rule."""
+    if devices is None or engine == "sharded":
+        return engine
+    if engine == "auto":
+        return "sharded"
+    raise ValueError(
+        f"devices= only applies to engine='sharded' (or 'auto'); "
+        f"engine={engine!r} would silently ignore it"
+    )
+
+
+def _resolve_engine(engine: str, n_hw: int, devices=None) -> str:
+    if engine not in ("auto", "jax", "sharded", "numpy"):
+        raise ValueError(
+            f"unknown engine {engine!r} (want auto|jax|sharded|numpy)"
+        )
+    engine = _devices_engine(engine, devices)
     # decide every numpy-bound case before touching .sweep: importing it
     # loads jax (~1s), which the lazy PEP-562 loader exists to avoid
     if engine == "numpy" or (engine == "auto" and n_hw < _AUTO_MIN_HW):
@@ -344,10 +366,17 @@ def _resolve_engine(engine: str, n_hw: int) -> str:
     from . import sweep
 
     if engine == "auto":
-        return "jax" if sweep.HAVE_JAX else "numpy"
+        if not sweep.HAVE_JAX:
+            return "numpy"
+        # promote to the mesh engine whenever there is a mesh to feed;
+        # on one device "sharded" degenerates to "jax" (same program),
+        # so the single-device jit path stays the simpler choice.
+        if sweep.device_count() > 1 and sweep.HAVE_SHARD_MAP:
+            return "sharded"
+        return "jax"
     if not sweep.HAVE_JAX:
         raise ModuleNotFoundError(
-            "engine='jax' requested but jax is not installed; "
+            f"engine={engine!r} requested but jax is not installed; "
             "use engine='auto' (soft fallback) or engine='numpy'"
         )
     return engine
@@ -363,33 +392,47 @@ def codesign(
     lattice_3d: TileLattice = LATTICE_3D,
     chunk: Optional[int] = None,
     engine: str = "auto",
+    devices=None,
 ) -> CodesignResult:
     """Solve eq. (18): for every feasible hardware point, the optimal tile
     sizes (and time) of every workload cell.
 
     ``engine`` picks the inner solver: ``"jax"`` (compiled sweep),
-    ``"numpy"`` (seed reference), or ``"auto"``. ``chunk`` bounds solver
-    memory (hardware points per slab); ``None`` uses each engine's default.
+    ``"sharded"`` (hardware axis over a device mesh), ``"numpy"`` (seed
+    reference), or ``"auto"`` (sharded when >1 device is attached, else
+    jax, else numpy). ``chunk`` bounds solver memory (hardware points per
+    slab -- per device on the sharded engine); ``None`` uses each engine's
+    default. ``devices`` is ``None`` for every attached device, an int for
+    the first n, or an explicit device sequence; setting it implies the
+    mesh engine (``"auto"`` promotes to ``"sharded"``, non-mesh engines
+    reject it rather than silently ignore it).
     """
     if hw is None:
         hw = enumerate_hw_space(area_model, max_area=max_area)
-    eng = _resolve_engine(engine, len(hw))
+    eng = _resolve_engine(engine, len(hw), devices)
     C, H = len(workload.cells), len(hw)
     cell_time = np.empty((C, H))
     cell_idx = np.empty((C, H), dtype=np.int64)
     lattices: List[TileLattice] = [
         lattice_3d if c.stencil.dims == 3 else lattice_2d for c in workload.cells
     ]
-    if eng == "jax":
+    if eng in ("jax", "sharded"):
         # one compiled dispatch per stencil family: all of a stencil's
         # problem sizes ride the sweep's extra vmap axis (amortizes
         # dispatch/launch overhead on accelerators; same argmins).
-        from .sweep import sweep_cells
+        from . import sweep
 
         for st, cis, sizes in _stencil_groups(workload).values():
-            t, i = sweep_cells(
-                st, gpu, sizes, hw.n_sm, hw.n_v, hw.m_sm, lattices[cis[0]], chunk
-            )
+            if eng == "sharded":
+                t, i = sweep.sweep_cells_sharded(
+                    st, gpu, sizes, hw.n_sm, hw.n_v, hw.m_sm,
+                    lattices[cis[0]], chunk, devices=devices,
+                )
+            else:
+                t, i = sweep.sweep_cells(
+                    st, gpu, sizes, hw.n_sm, hw.n_v, hw.m_sm,
+                    lattices[cis[0]], chunk,
+                )
             for j, ci in enumerate(cis):
                 cell_time[ci] = t[j]
                 cell_idx[ci] = i[j]

@@ -17,6 +17,11 @@ and runs it on whatever backend is attached (CPU, GPU, TPU):
 * an optional ``lax.map`` chunking knob bounds peak memory at
   ``chunk x |lattice|`` floats, for hardware spaces far larger than the
   paper's ~13k points;
+* :func:`sweep_cells_sharded` shards the hardware axis over a 1-D device
+  ``Mesh`` with ``shard_map`` + ``NamedSharding`` -- each device streams
+  its shard through the *same* fused body, so multi-device results are
+  bit-identical to the single-device engine while wall time scales with
+  the mesh (the fleet path; see README "Scaling the sweep");
 * coordinate-descent refinement (:func:`refine_points`) is batched across
   all reported design points at once -- each descent round evaluates every
   (point, +/-step neighbor) pair in a single compiled call instead of the
@@ -32,6 +37,7 @@ to the NumPy reference solver instead of this module.
 from __future__ import annotations
 
 import functools
+import warnings
 from typing import Dict, Tuple
 
 import numpy as np
@@ -44,19 +50,37 @@ try:  # pragma: no cover - exercised implicitly on import
     import jax
     import jax.numpy as jnp
     from jax import lax
+    from jax.sharding import Mesh, NamedSharding
+    from jax.sharding import PartitionSpec as P
 
     HAVE_JAX = True
 except ModuleNotFoundError:  # pragma: no cover
     jax = None
     jnp = None
     lax = None
+    Mesh = NamedSharding = P = None
     HAVE_JAX = False
+
+# shard_map gets its own guard: its home has moved (jax.experimental ->
+# jax.shard_map), and its absence must only disable the *sharded* engine,
+# never take HAVE_JAX -- and with it the single-device engine, the jax
+# test suite, and the bench parity asserts -- down with it.
+shard_map = getattr(jax, "shard_map", None) if HAVE_JAX else None
+if HAVE_JAX and shard_map is None:  # pragma: no cover - version-dependent
+    try:
+        from jax.experimental.shard_map import shard_map
+    except (ModuleNotFoundError, ImportError):
+        shard_map = None
+HAVE_SHARD_MAP = shard_map is not None
 
 __all__ = [
     "HAVE_JAX",
+    "HAVE_SHARD_MAP",
     "DEFAULT_CHUNK",
+    "device_count",
     "sweep_cell",
     "sweep_cells",
+    "sweep_cells_sharded",
     "refine_points",
     "clear_caches",
 ]
@@ -82,6 +106,42 @@ def _require_jax():
             "jax is required for the compiled sweep engine; "
             "use engine='numpy' (repro.core.solver.solve_cell) instead"
         )
+
+
+def device_count() -> int:
+    """Attached devices, 0 when jax is absent. The engine="auto" promotion
+    test monkeypatches this, so route all auto decisions through here."""
+    return jax.device_count() if HAVE_JAX else 0
+
+
+def _require_shard_map():
+    _require_jax()
+    if not HAVE_SHARD_MAP:
+        raise ModuleNotFoundError(
+            "this jax installation exposes neither jax.shard_map nor "
+            "jax.experimental.shard_map; the sharded engine is unavailable "
+            "-- use engine='jax' (single device) or engine='auto'"
+        )
+
+
+def _resolve_devices(devices):
+    """Normalize the ``devices=`` knob to a concrete device list.
+
+    ``None`` -> every attached device; an int n -> the first n devices (so
+    scaling-efficiency benchmarks can sweep 1..D on one host); an explicit
+    sequence of jax devices is used as-is.
+    """
+    _require_jax()
+    if devices is None:
+        return tuple(jax.devices())
+    if isinstance(devices, int):
+        avail = jax.devices()
+        if not 1 <= devices <= len(avail):
+            raise ValueError(
+                f"devices={devices} out of range (1..{len(avail)} attached)"
+            )
+        return tuple(avail[:devices])
+    return tuple(devices)
 
 
 def _lattice_arrays(lattice: TileLattice, gpu: GPUSpec):
@@ -121,29 +181,15 @@ def _traced_spec(dims: int, radius, c_iter, n_arrays) -> StencilSpec:
     )
 
 
-@functools.lru_cache(maxsize=None)
-def _cells_solver(dims: int, gpu: GPUSpec, lattice: TileLattice, chunk: int):
-    """Compiled (sizes x hardware x lattice) argmin solver, shared per
-    (dims, GPU, lattice, chunk).
+def _best_of_factory(gpu: GPUSpec, lat, keep_idx):
+    """The fused eq.-18 inner body shared by every compiled engine.
 
-    Returned callable:
-    ``(n_sm, n_v, m_sm, sizes (P, 4), radius, c_iter, n_arrays)
-    -> (best_t (P, H), best_i (P, H))`` over (H,) hardware arrays. Sizes
-    and stencil scalars are dynamic jit arguments, and the size axis is an
-    extra vmap dimension: all P problem sizes of a stencil family sweep in
-    ONE dispatch (the seed looped Python-side, paying per-cell dispatch).
-    The whole six-stencil paper sweep still compiles exactly twice
-    (2D + 3D); only a new (P, H) shape pair retraces.
+    Returns ``best_of(hw_chunk (n, 3), sizes (P, 4), st) -> (best_t (P, n),
+    best_i (P, n))``. Both the single-device and the shard_map engines call
+    exactly this function on their slabs, which is what makes the sharded
+    results bit-identical: the per-point expression, reduction order, and
+    dtype are byte-for-byte the same program.
     """
-    _require_jax()
-    lat, keep_idx = _lattice_arrays(lattice, gpu)
-    if keep_idx.shape[0] == 0:  # no candidate survives the static constraints
-
-        def solve_empty(n_sm, n_v, m_sm, sizes, radius, c_iter, n_arrays):
-            p, h = sizes.shape[0], n_sm.shape[0]
-            return jnp.full((p, h), jnp.inf), jnp.full((p, h), -1, jnp.int32)
-
-        return solve_empty
 
     def tile_times(hw_point, size_scalars, st):
         """(L,) candidate times for one hardware point -- the vmap body."""
@@ -166,6 +212,36 @@ def _cells_solver(dims: int, gpu: GPUSpec, lattice: TileLattice, chunk: int):
         # map back to seed lattice indices; -1 where nothing was feasible
         best_i = jnp.where(jnp.isfinite(best_t), keep_idx[best_i], -1)
         return best_t, best_i
+
+    return best_of
+
+
+def _solve_empty(n_sm, n_v, m_sm, sizes, radius, c_iter, n_arrays):
+    """Every-candidate-infeasible fast path (no lattice point survives the
+    static constraints): +inf / -1 without touching the mesh or compiler."""
+    p, h = sizes.shape[0], n_sm.shape[0]
+    return jnp.full((p, h), jnp.inf), jnp.full((p, h), -1, jnp.int32)
+
+
+@functools.lru_cache(maxsize=None)
+def _cells_solver(dims: int, gpu: GPUSpec, lattice: TileLattice, chunk: int):
+    """Compiled (sizes x hardware x lattice) argmin solver, shared per
+    (dims, GPU, lattice, chunk).
+
+    Returned callable:
+    ``(n_sm, n_v, m_sm, sizes (P, 4), radius, c_iter, n_arrays)
+    -> (best_t (P, H), best_i (P, H))`` over (H,) hardware arrays. Sizes
+    and stencil scalars are dynamic jit arguments, and the size axis is an
+    extra vmap dimension: all P problem sizes of a stencil family sweep in
+    ONE dispatch (the seed looped Python-side, paying per-cell dispatch).
+    The whole six-stencil paper sweep still compiles exactly twice
+    (2D + 3D); only a new (P, H) shape pair retraces.
+    """
+    _require_jax()
+    lat, keep_idx = _lattice_arrays(lattice, gpu)
+    if keep_idx.shape[0] == 0:  # no candidate survives the static constraints
+        return _solve_empty
+    best_of = _best_of_factory(gpu, lat, keep_idx)
 
     @jax.jit
     def solve(n_sm, n_v, m_sm, sizes, radius, c_iter, n_arrays):
@@ -190,6 +266,82 @@ def _cells_solver(dims: int, gpu: GPUSpec, lattice: TileLattice, chunk: int):
     return solve
 
 
+@functools.lru_cache(maxsize=None)
+def _sharded_cells_solver(
+    dims: int,
+    gpu: GPUSpec,
+    lattice: TileLattice,
+    chunk: int,
+    devices: tuple,
+):
+    """Multi-device solver: the (H,) hardware axis sharded over a 1-D mesh.
+
+    Same contract as :func:`_cells_solver`, but the caller must pass the
+    hardware columns already padded to ``len(devices) x max(chunk, 1)``
+    (see :func:`sweep_cells_sharded`): each device receives whole chunks,
+    so the per-shard program is shape-static and identical on every device.
+    ``devices`` is a tuple of jax Device objects (hashable singletons, so
+    they key the lru_cache directly -- never remapped through per-backend
+    integer ids, which collide across backends).
+
+    Inside each shard a ``lax.fori_loop`` streams chunk-sized slabs through
+    the fused time-model body and writes the per-chunk argmins into a
+    preallocated ``(P, H/D)`` output -- peak per-device memory is the
+    ``P x chunk x |lattice|`` times tensor of ONE slab plus the output,
+    regardless of how large the hardware space grows. The hw slab buffers
+    are donated: at fleet scale they are dead weight after the stack.
+    """
+    _require_shard_map()
+    mesh = Mesh(np.array(devices), ("hw",))
+    lat, keep_idx = _lattice_arrays(lattice, gpu)
+    if keep_idx.shape[0] == 0:
+        return mesh, _solve_empty
+    best_of = _best_of_factory(gpu, lat, keep_idx)
+
+    def shard_body(n_sm, n_v, m_sm, sizes, radius, c_iter, n_arrays):
+        """One device's shard: hw columns are the local (H/D,) slice."""
+        st = _traced_spec(dims, radius, c_iter, n_arrays)
+        hw = jnp.stack([n_sm, n_v, m_sm], axis=1)  # (H/D, 3)
+        h, p = hw.shape[0], sizes.shape[0]
+        if chunk <= 0 or h <= chunk:
+            return best_of(hw, sizes, st)
+        out_t = jnp.full((p, h), jnp.inf, jnp.float32)
+        out_i = jnp.full((p, h), -1, jnp.int32)
+
+        def one_chunk(c, carry):
+            out_t, out_i = carry
+            slab = lax.dynamic_slice_in_dim(hw, c * chunk, chunk, axis=0)
+            t, i = best_of(slab, sizes, st)
+            out_t = lax.dynamic_update_slice_in_dim(out_t, t, c * chunk, axis=1)
+            out_i = lax.dynamic_update_slice_in_dim(out_i, i, c * chunk, axis=1)
+            return out_t, out_i
+
+        return lax.fori_loop(0, h // chunk, one_chunk, (out_t, out_i))
+
+    sharded = shard_map(
+        shard_body,
+        mesh=mesh,
+        in_specs=(P("hw"), P("hw"), P("hw"), P(), P(), P(), P()),
+        out_specs=(P(None, "hw"), P(None, "hw")),
+    )
+    return mesh, jax.jit(sharded, donate_argnums=(0, 1, 2))
+
+
+def _prep_cells(st, sizes, lattice, chunk):
+    """Shared argument normalization for the compiled engines: default
+    lattice by dimensionality, (P, 4) size validation, P-scaled chunk."""
+    if lattice is None:
+        from .solver import LATTICE_2D, LATTICE_3D
+
+        lattice = LATTICE_3D if st.dims == 3 else LATTICE_2D
+    sizes = np.atleast_2d(np.asarray(sizes, np.float64))
+    if sizes.shape[1] != 4:
+        raise ValueError(f"sizes must be (P, 4) (s1, s2, s3, t); got {sizes.shape}")
+    if chunk is None:
+        chunk = max(1, DEFAULT_CHUNK // sizes.shape[0])
+    return lattice, sizes, int(chunk)
+
+
 def sweep_cells(
     st: StencilSpec,
     gpu: GPUSpec,
@@ -209,16 +361,8 @@ def sweep_cells(
     hardware slab down by P so peak memory matches the single-size sweep.
     """
     _require_jax()
-    if lattice is None:
-        from .solver import LATTICE_2D, LATTICE_3D
-
-        lattice = LATTICE_3D if st.dims == 3 else LATTICE_2D
-    sizes = np.atleast_2d(np.asarray(sizes, np.float64))
-    if sizes.shape[1] != 4:
-        raise ValueError(f"sizes must be (P, 4) (s1, s2, s3, t); got {sizes.shape}")
-    if chunk is None:
-        chunk = max(1, DEFAULT_CHUNK // sizes.shape[0])
-    solve = _cells_solver(st.dims, gpu, lattice, int(chunk))
+    lattice, sizes, chunk = _prep_cells(st, sizes, lattice, chunk)
+    solve = _cells_solver(st.dims, gpu, lattice, chunk)
     f32 = functools.partial(jnp.asarray, dtype=jnp.float32)
     best_t, best_i = solve(
         f32(np.asarray(n_sm).ravel()),
@@ -232,6 +376,79 @@ def sweep_cells(
     return (
         np.asarray(best_t, np.float64),
         np.asarray(best_i, np.int64),
+    )
+
+
+def sweep_cells_sharded(
+    st: StencilSpec,
+    gpu: GPUSpec,
+    sizes: np.ndarray,
+    n_sm: np.ndarray,
+    n_v: np.ndarray,
+    m_sm: np.ndarray,
+    lattice: TileLattice | None = None,
+    chunk: int | None = None,
+    devices=None,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """:func:`sweep_cells` with the hardware axis sharded across a device
+    mesh -- the fleet-scale eq.-18 path.
+
+    The (H,) hardware arrays are padded to a multiple of
+    ``len(devices) x chunk`` (repeating the first point, whose padded
+    results are discarded), partitioned over a 1-D ``Mesh(("hw",))`` with
+    ``NamedSharding``, and each device streams its shard through the same
+    fused time-model body as the single-device engine -- the gathered
+    ``(best_t, best_i)`` are **bit-identical** to :func:`sweep_cells`
+    (tested in ``tests/test_sweep_sharded.py``).
+
+    ``devices`` is ``None`` (all attached), an int (first n devices), or an
+    explicit device sequence. On CPU hosts, force a multi-device view with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` *before* jax
+    initializes to exercise the real sharded path.
+    """
+    _require_shard_map()
+    lattice, sizes, chunk = _prep_cells(st, sizes, lattice, chunk)
+    devs = _resolve_devices(devices)
+    n_dev = len(devs)
+    cols = [
+        np.asarray(np.asarray(a).ravel(), np.float32) for a in (n_sm, n_v, m_sm)
+    ]
+    h = cols[0].shape[0]
+    if h == 0:
+        p = sizes.shape[0]
+        return np.full((p, 0), np.inf), np.full((p, 0), -1, np.int64)
+    # cap the per-device chunk at the actual shard size: the default 2048
+    # against a small H would otherwise pad every device to a full chunk
+    # of discarded time-model evaluations (8 dev x 2048 for H=64).
+    if chunk > 0:
+        chunk = min(chunk, -(-h // n_dev))
+    # pad H so every device gets the same whole number of chunks: the shard
+    # program is shape-static, and a ragged tail cannot skew one device.
+    quantum = n_dev * max(chunk, 1)
+    h_pad = -(-h // quantum) * quantum
+    if h_pad != h:
+        cols = [np.concatenate([a, np.full(h_pad - h, a[0], a.dtype)]) for a in cols]
+    mesh, solve = _sharded_cells_solver(st.dims, gpu, lattice, chunk, devs)
+    shard = NamedSharding(mesh, P("hw"))
+    repl = NamedSharding(mesh, P())
+    f32 = functools.partial(jnp.asarray, dtype=jnp.float32)
+    with warnings.catch_warnings():
+        # the hw slabs are donated for accelerator meshes (dead after the
+        # stack); on hosts where no output can alias them XLA drops the
+        # donation and warns -- expected, not actionable.
+        warnings.filterwarnings(
+            "ignore", message="Some donated buffers were not usable"
+        )
+        best_t, best_i = solve(
+            *(jax.device_put(a, shard) for a in cols),
+            jax.device_put(f32(sizes), repl),
+            f32(st.radius),
+            f32(st.c_iter),
+            f32(st.n_arrays),
+        )
+    return (
+        np.asarray(best_t, np.float64)[:, :h],
+        np.asarray(best_i, np.int64)[:, :h],
     )
 
 
@@ -264,13 +481,18 @@ def sweep_cell(
 # Batched coordinate-descent refinement
 # ---------------------------------------------------------------------------
 @functools.lru_cache(maxsize=None)
-def _refine_round(dims: int, gpu: GPUSpec):
-    """Compiled one-round best-neighbor descent over (P,) design points.
+def _refine_descent(dims: int, gpu: GPUSpec):
+    """Compiled whole-descent best-neighbor refinement over (P,) points.
 
-    Candidates per point: current + (+step, -step) for each of the 5
-    software parameters, clamped to the aligned lower bounds. Returns the
-    per-point best candidate of the round (Jacobi-style: all points move
-    simultaneously, each to its best single-parameter neighbor).
+    Candidates per point per round: current + (+step, -step) for each of
+    the 5 software parameters, clamped to the aligned lower bounds; every
+    point moves to its best single-parameter neighbor simultaneously
+    (Jacobi-style). The rounds live in a ``lax.while_loop`` that stops on
+    convergence (a no-movement round) or after ``max_rounds`` -- the whole
+    descent is ONE dispatch and ONE device->host sync, where the previous
+    engine forced a blocking ``bool(jnp.all(...))`` transfer every round.
+    ``max_rounds`` is a dynamic operand, so changing the budget never
+    retraces.
     """
     _require_jax()
     steps = jnp.asarray(SW_STEPS, jnp.float32)
@@ -295,19 +517,40 @@ def _refine_round(dims: int, gpu: GPUSpec):
         )
 
     @jax.jit
-    def step(hw, sizes, sw, radius, c_iter, n_arrays):
-        """hw (P,3), sizes (P,4), sw (P,5) -> (times (P,), sw' (P,5))."""
+    def descend(hw, sizes, sw0, radius, c_iter, n_arrays, max_rounds):
+        """hw (P,3), sizes (P,4), sw0 (P,5) ->
+        (times (P,), sw (P,5), rounds executed)."""
         st = _traced_spec(dims, radius, c_iter, n_arrays)
-        cands = jax.vmap(candidates)(sw)  # (P, 2n+1, 5)
-        times = jax.vmap(
-            lambda h, s, c: eval_point(st, h, (s[0], s[1], s[2], s[3]), c)
-        )(hw, sizes, cands)  # (P, 2n+1)
-        best = jnp.argmin(times, axis=1)
-        best_t = jnp.take_along_axis(times, best[:, None], axis=1)[:, 0]
-        best_sw = jnp.take_along_axis(cands, best[:, None, None], axis=1)[:, 0]
-        return best_t, best_sw
 
-    return step
+        def one_round(sw):
+            cands = jax.vmap(candidates)(sw)  # (P, 2n+1, 5)
+            times = jax.vmap(
+                lambda h, s, c: eval_point(st, h, (s[0], s[1], s[2], s[3]), c)
+            )(hw, sizes, cands)  # (P, 2n+1)
+            best = jnp.argmin(times, axis=1)
+            best_t = jnp.take_along_axis(times, best[:, None], axis=1)[:, 0]
+            best_sw = jnp.take_along_axis(cands, best[:, None, None], axis=1)[:, 0]
+            return best_t, best_sw
+
+        def cond(carry):
+            _, _, rounds, moved = carry
+            return moved & (rounds < max_rounds)
+
+        def body(carry):
+            sw, _, rounds, _ = carry
+            best_t, best_sw = one_round(sw)
+            # a no-movement round means every point sat still (argmin ties
+            # break to the current point), so best_t is exact: stop.
+            moved = jnp.any(best_sw != sw)
+            return best_sw, best_t, rounds + 1, moved
+
+        t0 = jnp.full((sw0.shape[0],), jnp.inf, jnp.float32)
+        sw, t, rounds, _ = lax.while_loop(
+            cond, body, (sw0, t0, jnp.int32(0), jnp.bool_(True))
+        )
+        return t, sw, rounds
+
+    return descend
 
 
 def refine_points(
@@ -334,37 +577,36 @@ def refine_points(
     the seed, the guarantee holds only when the descent converges within
     ``max_rounds``; lattice-optimum starts (the intended use) converge in a
     handful of rounds, but arbitrary far-from-optimal ``sw0`` may exhaust
-    the budget and return the best point reached so far. The whole batch
-    descends in lock-step: each round is ONE compiled evaluation of all
-    ``P x 11`` candidates rather than P independent Python loops.
+    the budget and return the best point reached so far. The whole descent
+    -- every round, every ``P x 11`` candidate -- is one compiled
+    ``lax.while_loop`` dispatch with a single device->host sync at the end
+    (the previous per-round ``bool(jnp.all(...))`` convergence check forced
+    a blocking transfer every round).
     """
     _require_jax()
-    step = _refine_round(st.dims, gpu)
-    hw = jnp.asarray(np.asarray(hw, np.float64), jnp.float32)
-    sizes = jnp.asarray(np.asarray(sizes, np.float64), jnp.float32)
-    sw = jnp.asarray(np.asarray(sw0, np.float64), jnp.float32)
-    scalars = tuple(
-        jnp.asarray(v, jnp.float32) for v in (st.radius, st.c_iter, st.n_arrays)
-    )
-    cur = None
-    for _ in range(max_rounds):
-        best_t, best_sw = step(hw, sizes, sw, *scalars)
-        # a no-movement round means every point sat still (argmin ties break
-        # to the current point), so best_t is exact -- record it and stop.
-        converged = bool(jnp.all(best_sw == sw))
-        cur, sw = best_t, best_sw
-        if converged:
-            break
-    sw = np.asarray(sw, np.float64)
-    if cur is None:  # max_rounds=0: return the start points, like the oracle
-        sz = np.asarray(sizes, np.float64)
-        hw64 = np.asarray(hw, np.float64)
-        size = ProblemSize(s1=sz[:, 0], s2=sz[:, 1], t=sz[:, 3], s3=sz[:, 2])
+    hw64 = np.asarray(hw, np.float64)
+    sizes64 = np.asarray(sizes, np.float64)
+    sw = np.asarray(sw0, np.float64)
+    if max_rounds <= 0:  # return the start points untouched, like the oracle
+        size = ProblemSize(
+            s1=sizes64[:, 0], s2=sizes64[:, 1], t=sizes64[:, 3], s3=sizes64[:, 2]
+        )
         cur = stencil_time(
             st, gpu, size, hw64[:, 0], hw64[:, 1], hw64[:, 2],
             sw[:, 0], sw[:, 1], sw[:, 2], sw[:, 3], sw[:, 4],
         )
-    return np.asarray(cur, np.float64), sw
+        return np.asarray(cur, np.float64), sw
+    descend = _refine_descent(st.dims, gpu)
+    t, sw_out, _ = descend(
+        jnp.asarray(hw64, jnp.float32),
+        jnp.asarray(sizes64, jnp.float32),
+        jnp.asarray(sw, jnp.float32),
+        jnp.asarray(st.radius, jnp.float32),
+        jnp.asarray(st.c_iter, jnp.float32),
+        jnp.asarray(st.n_arrays, jnp.float32),
+        jnp.asarray(max_rounds, jnp.int32),
+    )
+    return np.asarray(t, np.float64), np.asarray(sw_out, np.float64)
 
 
 def decode_sw(sw_row: np.ndarray) -> Dict[str, int]:
@@ -375,4 +617,5 @@ def decode_sw(sw_row: np.ndarray) -> Dict[str, int]:
 def clear_caches() -> None:
     """Drop compiled solvers (mainly for tests/benchmarks timing cold starts)."""
     _cells_solver.cache_clear()
-    _refine_round.cache_clear()
+    _sharded_cells_solver.cache_clear()
+    _refine_descent.cache_clear()

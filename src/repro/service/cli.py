@@ -38,7 +38,13 @@ def _add_server_args(p: argparse.ArgumentParser) -> None:
                    help="hardware-space enumeration budget (mm^2)")
     p.add_argument("--downsample", type=int, default=1,
                    help="keep every Nth hardware point (quick demos)")
-    p.add_argument("--engine", choices=("auto", "jax", "numpy"), default="auto")
+    p.add_argument(
+        "--engine", choices=("auto", "jax", "sharded", "numpy"), default="auto"
+    )
+    p.add_argument(
+        "--devices", type=int, default=None,
+        help="sharded engine: first N attached devices (default: all)",
+    )
 
 
 def _server(args) -> CodesignServer:
@@ -47,6 +53,7 @@ def _server(args) -> CodesignServer:
         max_area=args.max_hw_area,
         downsample=args.downsample,
         engine=args.engine,
+        devices=args.devices,
         batch_window=0.0,  # CLI is single-threaded; no rendezvous needed
     )
 

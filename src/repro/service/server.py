@@ -50,7 +50,11 @@ class CodesignServer:
     waits for followers; 0 disables batching (every query answers solo,
     still thread-safe). The default workload is the paper's Fig.-3
     six-stencil uniform mix; ``downsample`` thins the hardware space for
-    demos/CI.
+    demos/CI. ``engine``/``devices`` pick the sweep engine for the miss
+    path (``"sharded"`` partitions the hardware axis over a device mesh);
+    the content address canonicalizes bit-identical engines, so an
+    artifact built sharded on an 8-device host warms a single-device
+    ``engine="jax"`` server and vice versa.
     """
 
     def __init__(
@@ -64,6 +68,7 @@ class CodesignServer:
         downsample: int = 1,
         engine: str = "auto",
         chunk: Optional[int] = None,
+        devices=None,
         lattice_2d: TileLattice = LATTICE_2D,
         lattice_3d: TileLattice = LATTICE_3D,
         batch_window: float = 0.002,
@@ -72,8 +77,8 @@ class CodesignServer:
         self.store = store
         self.workload = workload or paper_workload()
         self.gpu = gpu
-        self.engine = engine
         self.chunk = chunk
+        self.devices = devices
         self.lattice_2d = lattice_2d
         self.lattice_3d = lattice_3d
         self.batch_window = float(batch_window)
@@ -83,6 +88,17 @@ class CodesignServer:
             if downsample > 1:
                 hw = hw.downsample(downsample)
         self.hw = hw
+        # apply the devices= promotion ONCE (auto -> sharded, non-mesh
+        # engines rejected), so the key below, the miss-path build, and
+        # the persisted artifact can never disagree about which matrix
+        # family they name. Full auto resolution stays lazy: it needs
+        # device_count(), which would initialize the jax backend on warm
+        # paths that never sweep (the digest resolves the remaining
+        # "auto" to its matrix family without touching a backend).
+        from repro.core.codesign import _devices_engine
+
+        engine = _devices_engine(engine, devices)
+        self.engine = engine
         #: the artifact identity is known BEFORE any sweep runs -- that is
         #: what makes the warm path engine-free.
         self.key = store.key_for(
@@ -111,23 +127,36 @@ class CodesignServer:
             if self._engine is None:
                 art = self.store.get(self.key)
                 if art is None:
-                    result = codesign(
-                        self.workload,
-                        gpu=self.gpu,
-                        hw=self.hw,
-                        lattice_2d=self.lattice_2d,
-                        lattice_3d=self.lattice_3d,
-                        chunk=self.chunk,
-                        engine=self.engine,
-                    )
-                    art = self.store.put(
-                        result,
-                        engine=self.engine,
-                        lattice_2d=self.lattice_2d,
-                        lattice_3d=self.lattice_3d,
-                    )
-                    assert art.key == self.key, "store key drifted from server key"
-                    self.stats["artifact_builds"] += 1
+                    # cross-process dedup: a second process racing to the
+                    # same key blocks here, then finds the winner's
+                    # artifact on the re-check instead of re-sweeping
+                    # (build_lock is reentrant, so store.put below can
+                    # re-acquire it around the staged write).
+                    with self.store.build_lock(self.key):
+                        art = self.store.get(self.key)
+                        if art is None:
+                            result = codesign(
+                                self.workload,
+                                gpu=self.gpu,
+                                hw=self.hw,
+                                lattice_2d=self.lattice_2d,
+                                lattice_3d=self.lattice_3d,
+                                chunk=self.chunk,
+                                engine=self.engine,
+                                devices=self.devices,
+                            )
+                            art = self.store.put(
+                                result,
+                                engine=self.engine,
+                                lattice_2d=self.lattice_2d,
+                                lattice_3d=self.lattice_3d,
+                            )
+                            assert art.key == self.key, (
+                                "store key drifted from server key"
+                            )
+                            self.stats["artifact_builds"] += 1
+                        else:
+                            self.stats["artifact_loads"] += 1
                 else:
                     self.stats["artifact_loads"] += 1
                 self._engine = QueryEngine(art, lru_size=self.lru_size)

@@ -20,20 +20,38 @@ re-reduction over it. This module persists :class:`repro.core.codesign
   and materializes arrays on first attribute access -- ``cell_time`` as an
   ``mmap_mode="r"`` view, the npz members on demand;
 * atomic writes: artifacts are staged in a temp directory and renamed into
-  place, so readers never observe a half-written artifact.
+  place, so readers never observe a half-written artifact; an exclusive
+  per-key ``flock`` (:meth:`ArtifactStore.build_lock`) serializes
+  concurrent builders across processes -- the loser reuses the winner's
+  artifact instead of re-solving/re-staging.
 """
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import hashlib
 import json
 import os
 import shutil
 import tempfile
+import threading
 from typing import Dict, List, Optional
 
 import numpy as np
+
+try:  # POSIX file locks for the cross-process build path
+    import fcntl
+except ImportError:  # pragma: no cover - non-POSIX: fall back to lock-free
+    fcntl = None
+
+#: process-wide registry of held build locks: lock-file path -> [fd, depth].
+#: flock is per open-file-description, so re-opening the same lock file in
+#: one process (server wraps the whole build, put wraps the staged write)
+#: would self-deadlock; the registry makes :meth:`ArtifactStore.build_lock`
+#: reentrant *within* a process while staying exclusive *across* processes.
+_HELD_LOCKS: Dict[str, list] = {}
+_HELD_LOCKS_MU = threading.Lock()
 
 from repro.core.codesign import CodesignResult, HardwareSpace
 from repro.core.solver import LATTICE_2D, LATTICE_3D, TileLattice
@@ -45,6 +63,37 @@ __all__ = ["FORMAT_VERSION", "Artifact", "ArtifactStore", "artifact_spec", "spec
 #: bump when the on-disk layout or the solver semantics change; old
 #: artifacts then read as misses (the store rebuilds, never mis-serves).
 FORMAT_VERSION = 1
+
+#: engines whose optima matrices are bit-identical share one content
+#: address: "sharded" is the same compiled program as "jax", merely
+#: partitioned over a device mesh, so an artifact built on an 8-device
+#: host warms a single-device host (and vice versa). "numpy" keeps its own
+#: key -- the float64 oracle differs from the float32 engines in the last
+#: ulps, and the digest must never claim two different matrices are one.
+#: "auto" is resolved to the concrete engine it would pick *before*
+#: digesting (see :func:`artifact_spec`): keying the unresolved alias
+#: would let a jax host's float32 matrix and a jax-less host's float64
+#: matrix share one key.
+_DIGEST_ENGINE = {"sharded": "jax"}
+
+
+def _digest_engine(engine: str, n_hw: int) -> str:
+    if engine == "auto":
+        # resolve only the matrix *family* (float64 oracle vs float32
+        # compiled) -- deliberately NOT via _resolve_engine, whose
+        # device_count() call would initialize the jax backend (on GPU
+        # hosts: ~75% memory preallocation) on warm paths that never
+        # sweep. Device count cannot matter here: multi-device auto picks
+        # "sharded", which canonicalizes to "jax" anyway.
+        from repro.core.codesign import _AUTO_MIN_HW
+
+        if n_hw < _AUTO_MIN_HW:
+            engine = "numpy"
+        else:
+            from repro.core import sweep  # module import only, no backend
+
+            engine = "jax" if sweep.HAVE_JAX else "numpy"
+    return _DIGEST_ENGINE.get(engine, engine)
 
 
 def _canonical_json(obj) -> str:
@@ -86,7 +135,7 @@ def artifact_spec(
         "hw_digest": _array_digest(hw.n_sm, hw.n_v, hw.m_sm, hw.area),
         "n_hw": len(hw),
         "lattices": {"2d": lat_d(lattice_2d), "3d": lat_d(lattice_3d)},
-        "engine": engine,
+        "engine": _digest_engine(engine, len(hw)),
     }
 
 
@@ -230,6 +279,46 @@ class ArtifactStore:
     def _path(self, key: str) -> str:
         return os.path.join(self.root, key)
 
+    @contextlib.contextmanager
+    def build_lock(self, key: str):
+        """Exclusive **cross-process** lock for one key's build/staged-write.
+
+        Two processes building the same artifact key serialize here: the
+        loser re-checks the store after acquiring and finds the winner's
+        artifact instead of re-staging (and, for callers that wrap the
+        whole sweep -- :meth:`CodesignServer.ensure_artifact` -- instead of
+        re-solving). Reentrant within a process via a refcount registry;
+        it is NOT a cross-thread mutex (in-process threads serialize with
+        their own locks, as the server does). Lock files are dot-prefixed
+        so :meth:`keys` never lists them, and are left in place --
+        unlinking a locked path would hand a third process a fresh inode
+        and break the mutual exclusion. No-op where ``fcntl`` is
+        unavailable (non-POSIX), which degrades to the previous
+        benign-rename behavior."""
+        if fcntl is None:
+            yield
+            return
+        path = os.path.join(self.root, f".lock-{key}")
+        with _HELD_LOCKS_MU:
+            held = _HELD_LOCKS.get(path)
+            if held is not None:
+                held[1] += 1
+        if held is None:
+            fd = os.open(path, os.O_CREAT | os.O_RDWR, 0o644)
+            fcntl.flock(fd, fcntl.LOCK_EX)  # may block on another process
+            with _HELD_LOCKS_MU:
+                _HELD_LOCKS[path] = [fd, 1]
+        try:
+            yield
+        finally:
+            with _HELD_LOCKS_MU:
+                ent = _HELD_LOCKS[path]
+                ent[1] -= 1
+                if ent[1] == 0:
+                    del _HELD_LOCKS[path]
+                    fcntl.flock(ent[0], fcntl.LOCK_UN)
+                    os.close(ent[0])
+
     def has(self, key: str) -> bool:
         return self.get(key) is not None
 
@@ -254,12 +343,15 @@ class ArtifactStore:
     ) -> Artifact:
         """Persist a sweep result; returns the (re)loaded lazy handle.
 
-        Writes are staged and renamed into place, so a concurrent reader
-        sees either nothing or the whole artifact; a concurrent writer of
-        the same key loses the rename race benignly (same content).
-        ``lattice_2d``/``lattice_3d`` pin the key's lattice tables when the
-        workload exercises only one dimensionality (otherwise inferred from
-        the result's per-cell lattices, falling back to the defaults)."""
+        The staged write runs under :meth:`build_lock`, so two processes
+        persisting the same key serialize and the loser returns the
+        winner's artifact without re-staging (content addressing guarantees
+        the bytes match). Writes are still staged in a temp dir and renamed
+        into place, so a reader that ignores the lock sees either nothing
+        or the whole artifact. ``lattice_2d``/``lattice_3d`` pin the key's
+        lattice tables when the workload exercises only one dimensionality
+        (otherwise inferred from the result's per-cell lattices, falling
+        back to the defaults)."""
         lat2 = lattice_2d or next(
             (lat for lat in result.lattices if len(lat.t_s3) == 1), LATTICE_2D
         )
@@ -278,23 +370,29 @@ class ArtifactStore:
                     "hw": int(arrays["cell_time"].shape[1])},
             extra=extra or {},
         )
-        tmp = tempfile.mkdtemp(prefix=f".stage-{key}-", dir=self.root)
-        try:
-            np.save(os.path.join(tmp, "cell_time.npy"), arrays["cell_time"])
-            np.savez_compressed(
-                os.path.join(tmp, "arrays.npz"),
-                **{k: v for k, v in arrays.items() if k != "cell_time"},
-            )
-            with open(os.path.join(tmp, "manifest.json"), "w") as f:
-                json.dump(manifest, f, indent=1)
+        with self.build_lock(key):
+            existing = self.get(key)
+            if existing is not None:  # a racing builder finished first
+                return existing
+            tmp = tempfile.mkdtemp(prefix=f".stage-{key}-", dir=self.root)
             try:
-                os.replace(tmp, self._path(key))
-            except OSError:
-                if not os.path.exists(os.path.join(self._path(key), "manifest.json")):
-                    raise  # real failure, not a lost same-key race
-        finally:
-            if os.path.exists(tmp):
-                shutil.rmtree(tmp, ignore_errors=True)
+                np.save(os.path.join(tmp, "cell_time.npy"), arrays["cell_time"])
+                np.savez_compressed(
+                    os.path.join(tmp, "arrays.npz"),
+                    **{k: v for k, v in arrays.items() if k != "cell_time"},
+                )
+                with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                    json.dump(manifest, f, indent=1)
+                try:
+                    os.replace(tmp, self._path(key))
+                except OSError:
+                    if not os.path.exists(
+                        os.path.join(self._path(key), "manifest.json")
+                    ):
+                        raise  # real failure, not a lost same-key race
+            finally:
+                if os.path.exists(tmp):
+                    shutil.rmtree(tmp, ignore_errors=True)
         art = self.get(key)
         assert art is not None
         return art

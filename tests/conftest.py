@@ -1,0 +1,20 @@
+"""Shared test fixtures."""
+
+import os
+
+import pytest
+
+
+@pytest.fixture
+def subprocess_env():
+    """os.environ copy with src/ prepended to PYTHONPATH.
+
+    Subprocess-spawning tests need this: pytest's ``pythonpath = ["src"]``
+    config applies only in-process, so a bare-pytest run (no
+    ``pip install -e``) would leave children unable to import ``repro``.
+    """
+    env = dict(os.environ)
+    src = os.path.abspath(os.path.join(os.path.dirname(__file__), os.pardir, "src"))
+    prev = env.get("PYTHONPATH")
+    env["PYTHONPATH"] = src + (os.pathsep + prev if prev else "")
+    return env

@@ -93,6 +93,75 @@ def test_stale_format_version_reads_as_miss(built, monkeypatch):
     assert store.get(srv.key) is None  # rebuilt, never mis-served
 
 
+def test_key_is_engine_invariant_for_bit_identical_engines(built):
+    """'sharded' is the same compiled program as 'jax' over a mesh, so the
+    two must share one content address (a warm artifact built on an
+    8-device host serves a 1-device host); the float64 'numpy' oracle must
+    keep a distinct key."""
+    store, _, _ = built
+    wl = paper_workload()
+    k_jax = store.key_for(wl, MAXWELL_GPU, small_hw(), "jax")
+    assert store.key_for(wl, MAXWELL_GPU, small_hw(), "sharded") == k_jax
+    assert store.key_for(wl, MAXWELL_GPU, small_hw(), "numpy") != k_jax
+    # "auto" digests as the engine it would resolve to on this host --
+    # never as the raw alias (which would let a float32 and a float64
+    # matrix share one key depending on where the build happened)
+    from repro.core import sweep
+
+    k_auto = store.key_for(wl, MAXWELL_GPU, small_hw(), "auto")
+    assert k_auto == (k_jax if sweep.HAVE_JAX else
+                      store.key_for(wl, MAXWELL_GPU, small_hw(), "numpy"))
+
+
+def test_put_same_key_reuses_winner_without_restaging(built):
+    """The build lock's re-check: a second put of an already-stored key
+    returns the existing artifact and leaves its files untouched."""
+    import os
+
+    store, srv, fresh = built
+    art = store.get(srv.key)
+    manifest_path = os.path.join(art.path, "manifest.json")
+    mtime = os.stat(manifest_path).st_mtime_ns
+    again = store.put(fresh, engine="auto")
+    assert again.key == srv.key
+    assert os.stat(manifest_path).st_mtime_ns == mtime  # no re-stage
+    assert os.path.exists(os.path.join(store.root, f".lock-{srv.key}"))
+
+
+@pytest.mark.skipif(
+    store_mod.fcntl is None, reason="no fcntl: build_lock degrades to a no-op"
+)
+def test_build_lock_excludes_across_processes(built, subprocess_env):
+    """Cross-process exclusion: while this process holds the build lock, a
+    child process must block on it (and proceed after release)."""
+    import subprocess
+    import sys
+    import time as _time
+
+    store, _, _ = built
+    child = """
+import sys
+from repro.service.store import ArtifactStore
+store = ArtifactStore(sys.argv[1])
+print("WAITING", flush=True)
+with store.build_lock(sys.argv[2]):
+    print("ACQUIRED", flush=True)
+"""
+    key = "lock-contention-test"
+    with store.build_lock(key):
+        with store.build_lock(key):  # reentrant within the process
+            pass
+        proc = subprocess.Popen(
+            [sys.executable, "-c", child, store.root, key],
+            stdout=subprocess.PIPE, text=True, env=subprocess_env,
+        )
+        assert proc.stdout.readline().strip() == "WAITING"
+        _time.sleep(0.3)  # give the child time to (wrongly) acquire
+        assert proc.poll() is None, "child acquired a held exclusive lock"
+    out, _ = proc.communicate(timeout=30)
+    assert "ACQUIRED" in out  # released lock handed over cleanly
+
+
 # ---------------------------------------------------------------------------
 # acceptance: warm queries never touch a sweep engine
 # ---------------------------------------------------------------------------
