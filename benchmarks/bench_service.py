@@ -1,25 +1,50 @@
 """Codesign query service: queries/sec cold (artifact miss -> full eq.-18
-sweep) vs warm (stored artifact -> vectorized re-reductions).
+sweep) vs warm (stored artifact -> vectorized re-reductions), then the
+fleet gateway's tax on top of warm (routing + LRU server pool, locally
+and over the HTTP wire).
 
 Cold is measured against a throwaway store so the number is honest even
 when CI restored the persistent artifact cache; warm is measured against
 the persistent store with a fresh server (artifact mmap-loaded from disk,
 LRU cold), then with the LRU primed, then through the stacked
 ``query_many`` matmul. The warm/cold ratio is asserted >= 100x -- the
-entire point of persisting the separability matrix."""
+entire point of persisting the separability matrix.
+
+The gateway stages build a second GPU target (titanx) into the same store
+and alternate requests across both artifacts -- real fleet traffic, every
+query routed -- first through :meth:`Gateway.query` in-process, then
+through the stdlib HTTP server + client. Gateway QPS (warm local vs
+over-HTTP) is appended to the repo-root ``BENCH_sweep.json`` trajectory
+(schema: ``benchmarks/README.md``)."""
 
 from __future__ import annotations
 
 import os
 import shutil
 import tempfile
+import threading
 import time
 
 import numpy as np
 
-from repro.service import ArtifactStore, CodesignServer, QueryRequest
+from repro.core.timemodel import TITANX_GPU
+from repro.service import (
+    ArtifactStore,
+    CodesignServer,
+    Gateway,
+    GatewayClient,
+    QueryRequest,
+    serve_http,
+)
 
-from .common import ARTIFACTS, SMOKE_HW_STRIDE, emit, skey, smoke
+from .common import (
+    ARTIFACTS,
+    SMOKE_HW_STRIDE,
+    append_trajectory,
+    emit,
+    skey,
+    smoke,
+)
 
 #: distinct frequency mixes per warm pass (all LRU misses on the first lap)
 N_MIXES = 64
@@ -107,3 +132,63 @@ def run() -> None:
         f"(acceptance floor 100x)",
     )
     assert ratio >= 100.0, f"warm path only {ratio:.1f}x cold"
+
+    # --- gateway: routed fleet traffic, local then over HTTP ---------------
+    # a second GPU target in the same store makes the routing honest: every
+    # request below is resolved (key -> routing index -> pooled per-artifact
+    # server) before it is answered. Requests pin content keys: a persistent
+    # fleet store legitimately accumulates extra artifacts across code
+    # versions, so a bare {"gpu": ...} selector may be (correctly) ambiguous.
+    srv_tx = CodesignServer(
+        store, gpu=TITANX_GPU, downsample=downsample, batch_window=0.0
+    )
+    srv_tx.ensure_artifact()
+    gw = Gateway(store.root, pool_size=4, batch_window=0.0)
+    targets = [srv.key, srv_tx.key]
+
+    reqs = _mixes(rng, N_MIXES)
+    t0 = time.perf_counter()
+    for i, r in enumerate(reqs):
+        gw.query(r, artifact=targets[i % 2])
+    t_gw = time.perf_counter() - t0
+    qps_gw_local = len(reqs) / t_gw
+    emit(
+        "service_gateway_local", t_gw / len(reqs) * 1e6,
+        f"routed across {len(gw)} artifacts in-process: "
+        f"{qps_gw_local:.0f} q/s",
+    )
+
+    httpd = serve_http(gw)
+    threading.Thread(target=httpd.serve_forever, daemon=True).start()
+    client = GatewayClient("http://%s:%d" % httpd.server_address[:2])
+    reqs = _mixes(rng, N_MIXES)
+    try:
+        t0 = time.perf_counter()
+        for i, r in enumerate(reqs):
+            client.query(r, artifact=targets[i % 2])
+        t_http = time.perf_counter() - t0
+    finally:
+        httpd.shutdown()
+        httpd.server_close()
+    qps_gw_http = len(reqs) / t_http
+    emit(
+        "service_gateway_http", t_http / len(reqs) * 1e6,
+        f"same routed mixes over the HTTP wire: {qps_gw_http:.0f} q/s "
+        f"({qps_gw_local / qps_gw_http:.1f}x wire tax)",
+    )
+
+    append_trajectory(
+        "sweep",
+        {
+            "suite": "service",
+            "smoke": smoke(),
+            "artifacts": len(gw),
+            "hw_points": len(srv.hw),
+            "cold_s": round(t_cold, 4),
+            "warm_qps": round(qps_warm, 1),
+            "warm_lru_qps": round(len(reqs) / t_lru, 1),
+            "batched_qps": round(len(batch) / t_batch, 1),
+            "gateway_local_qps": round(qps_gw_local, 1),
+            "gateway_http_qps": round(qps_gw_http, 1),
+        },
+    )

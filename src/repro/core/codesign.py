@@ -247,14 +247,27 @@ class CodesignResult:
                     tiles[ci] = start[ci]
         return times, tiles
 
+    def routing_metadata(self) -> Dict[str, object]:
+        """The attributes a multi-artifact front-end routes on, derivable
+        without touching any array: GPU target, stencil set, workload name.
+        Persisted verbatim as the manifest's ``"routing"`` block so a
+        gateway can index hundreds of artifacts from their (small) JSON
+        manifests alone -- no mmap, no npz decompression."""
+        return {
+            "gpu": self.gpu.name,
+            "workload": self.workload.name,
+            "stencils": sorted({c.stencil.name for c in self.workload.cells}),
+        }
+
     # ---- artifact serialization (repro.service.store persistence hooks) ---
     def artifact_payload(self) -> Tuple[dict, Dict[str, np.ndarray]]:
         """(manifest, arrays) split for on-disk persistence.
 
         The manifest is pure JSON (workload cells with full stencil specs,
-        GPU constants, the per-cell lattice tables); the arrays dict holds
-        the big matrices. :meth:`from_artifact_payload` inverts it exactly:
-        JSON round-trips float64 losslessly, so a reloaded result's
+        GPU constants, the per-cell lattice tables, and the ``"routing"``
+        block of :meth:`routing_metadata`); the arrays dict holds the big
+        matrices. :meth:`from_artifact_payload` inverts it exactly: JSON
+        round-trips float64 losslessly, so a reloaded result's
         ``weighted_time``/``pareto`` are bit-identical.
         """
         unique: List[TileLattice] = []
@@ -284,6 +297,7 @@ class CodesignResult:
                 {k: list(getattr(lat, k)) for k in ("t_s1", "t_s2", "t_t", "k", "t_s3")}
                 for lat in unique
             ],
+            "routing": self.routing_metadata(),
         }
         arrays = {
             "cell_time": np.asarray(self.cell_time, np.float64),
@@ -295,12 +309,15 @@ class CodesignResult:
         }
         return manifest, arrays
 
-    @classmethod
-    def from_artifact_payload(
-        cls, manifest: dict, arrays: Dict[str, np.ndarray]
-    ) -> "CodesignResult":
-        """Rebuild a result from :meth:`artifact_payload` output. Array
-        values may be mmap-backed; they are used as-is (no copy)."""
+    @staticmethod
+    def parse_manifest(
+        manifest: dict,
+    ) -> Tuple[Workload, GPUSpec, List[TileLattice]]:
+        """The JSON-only half of :meth:`from_artifact_payload`:
+        ``(workload, gpu, per-cell lattices)`` from a stored manifest,
+        touching no arrays. A service front-end uses this to reconstruct a
+        server's configuration from a discovered artifact without paging
+        in its ``(C, H)`` matrix."""
         from .timemodel import StencilSpec  # local: avoid cycle at import
 
         lattices_tbl = [
@@ -317,6 +334,15 @@ class CodesignResult:
             lattices.append(lattices_tbl[c["lattice"]])
         workload = Workload(manifest["workload"]["name"], tuple(cells))
         gpu = GPUSpec(**manifest["gpu"])
+        return workload, gpu, lattices
+
+    @classmethod
+    def from_artifact_payload(
+        cls, manifest: dict, arrays: Dict[str, np.ndarray]
+    ) -> "CodesignResult":
+        """Rebuild a result from :meth:`artifact_payload` output. Array
+        values may be mmap-backed; they are used as-is (no copy)."""
+        workload, gpu, lattices = cls.parse_manifest(manifest)
         hw = HardwareSpace(
             n_sm=np.asarray(arrays["hw_n_sm"], np.float64),
             n_v=np.asarray(arrays["hw_n_v"], np.float64),

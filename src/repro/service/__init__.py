@@ -5,16 +5,34 @@ as a ``(cells x hardware)`` matrix; once persisted, every workload
 question is a cheap vectorized re-reduction ("sensitivity for free",
 paper §V.B). This package turns that observation into a serving system:
 
-* :mod:`repro.service.store`  -- versioned, content-addressed on-disk
+* :mod:`repro.service.store`   -- versioned, content-addressed on-disk
   artifacts (compressed npz + JSON manifest, mmap-backed lazy loads);
-* :mod:`repro.service.query`  -- ``QueryRequest -> QueryResponse``
+* :mod:`repro.service.query`   -- ``QueryRequest -> QueryResponse``
   re-reductions (mixes, top-k, Pareto, what-ifs) with an LRU;
-* :mod:`repro.service.server` -- thread-safe in-process server that
+* :mod:`repro.service.server`  -- thread-safe in-process server that
   microbatches concurrent queries into one ``(B, C) @ (C, H)`` matmul and
   falls back to the sweep engine exactly once on artifact miss;
-* :mod:`repro.service.cli`    -- ``python -m repro.service.cli query ...``.
+* :mod:`repro.service.gateway` -- the fleet front door: discovers every
+  artifact across store roots, routes each request by content key or
+  selector (GPU / stencil set / workload), keeps an LRU-bounded pool of
+  per-artifact servers, and serves it all over stdlib HTTP;
+* :mod:`repro.service.wire`    -- the versioned HTTP/JSON codec (requests,
+  responses, structured errors) -- see ``docs/serving.md``;
+* :mod:`repro.service.client`  -- thin ``urllib`` client for a gateway;
+* :mod:`repro.service.cli`     -- ``python -m repro.service.cli
+  query|build|ls|serve`` (``query --url`` goes over HTTP).
 """
 
+from .client import GatewayClient  # noqa: F401
+from .gateway import (  # noqa: F401
+    AmbiguousRouteError,
+    Gateway,
+    GatewayError,
+    GatewayHTTPServer,
+    UnknownArtifactError,
+    serve_http,
+)
 from .query import QueryEngine, QueryRequest, QueryResponse  # noqa: F401
 from .server import CodesignServer  # noqa: F401
 from .store import Artifact, ArtifactStore, artifact_spec, spec_key  # noqa: F401
+from .wire import RemoteError, WireError  # noqa: F401

@@ -7,7 +7,14 @@ call -- any frequency mix, budget, what-if -- is a warm re-reduction):
     python -m repro.service.cli query --freq heat2d=3 --freq jacobi2d=1 \\
         --top-k 5 --pareto --fix n_sm=16
     python -m repro.service.cli build --downsample 4     # pre-warm a store
+    python -m repro.service.cli build --gpu titanx       # second GPU target
     python -m repro.service.cli ls
+
+Fleet serving (gateway over every stored artifact; see docs/serving.md):
+
+    python -m repro.service.cli serve --port 8932
+    python -m repro.service.cli query --url http://127.0.0.1:8932 \\
+        --gpu titanx --stencil heat2d --max-area 450
 
 The store location is ``--store``, else ``$REPRO_STORE``, else
 ``~/.cache/repro/codesign-store``.
@@ -20,20 +27,42 @@ import json
 import os
 import sys
 import time
+import urllib.error
 
 import numpy as np
 
 from .query import QueryRequest
 from .server import CodesignServer
 from .store import ArtifactStore
+from .wire import RemoteError
 
 DEFAULT_STORE = os.environ.get(
     "REPRO_STORE", os.path.join(os.path.expanduser("~"), ".cache", "repro", "codesign-store")
 )
 
+#: GPU targets an artifact can be built for / routed by (paper §IV.B uses
+#: the GTX-980 Maxwell constants; Titan X is the §V validation part).
+GPUS = {"gtx980": None, "titanx": None}  # resolved lazily (jax-free import)
+
+
+def _gpu(name: str):
+    from repro.core.timemodel import MAXWELL_GPU, TITANX_GPU
+
+    return {"gtx980": MAXWELL_GPU, "titanx": TITANX_GPU}[name]
+
+
+def _die(message: str) -> "SystemExit":
+    """Clear one-line failure on stderr, exit status 2 -- never a
+    traceback (the CI smoke lane asserts this)."""
+    print(f"error: {message}", file=sys.stderr)
+    return SystemExit(2)
+
 
 def _add_server_args(p: argparse.ArgumentParser) -> None:
     p.add_argument("--store", default=DEFAULT_STORE, help="artifact store directory")
+    p.add_argument("--gpu", choices=sorted(GPUS), default=None,
+                   help="GPU target constants (default gtx980); with --url, "
+                        "the routing selector instead")
     p.add_argument("--max-hw-area", type=float, default=650.0,
                    help="hardware-space enumeration budget (mm^2)")
     p.add_argument("--downsample", type=int, default=1,
@@ -50,6 +79,7 @@ def _add_server_args(p: argparse.ArgumentParser) -> None:
 def _server(args) -> CodesignServer:
     return CodesignServer(
         ArtifactStore(args.store),
+        gpu=_gpu(args.gpu or "gtx980"),
         max_area=args.max_hw_area,
         downsample=args.downsample,
         engine=args.engine,
@@ -80,9 +110,28 @@ def _fix(args):
     return fix or None
 
 
+def _print_response(resp, out, total_hw=None) -> None:
+    """Shared human-readable rendering for the in-process and --url paths
+    (same QueryResponse object either way)."""
+    b = out["best"]
+    if resp.best_index < 0:
+        print("no design satisfies the requested constraints "
+              "(budget/fix select an empty subspace)")
+        return
+    print(f"best:  n_SM={b['n_sm']:3d} n_V={b['n_v']:4d} M_SM={b['m_sm']:4.0f}kB "
+          f"area={b['area']:6.1f}mm^2  {b['gflops']:8.1f} GFLOP/s")
+    for r in resp.top_k[1:]:
+        print(f"       n_SM={r['n_sm']:3d} n_V={r['n_v']:4d} M_SM={r['m_sm']:4.0f}kB "
+              f"area={r['area']:6.1f}mm^2  {r['gflops']:8.1f} GFLOP/s")
+    if "pareto" in out:
+        of = f" of {total_hw}" if total_hw else ""
+        print(f"pareto front: {out['pareto']['count']}{of} designs")
+    if "what_if" in out:
+        w = out["what_if"]
+        print(f"what-if delta vs unrestricted best: {w['delta_gflops']:+.1f} GFLOP/s")
+
+
 def cmd_query(args) -> None:
-    srv = _server(args)
-    was_warm = srv.warm
     req = QueryRequest(
         freqs=_freqs(args),
         max_area=args.max_area,
@@ -91,13 +140,36 @@ def cmd_query(args) -> None:
         pareto=args.pareto,
         fix=_fix(args),
     )
-    t0 = time.perf_counter()
-    resp = srv.query(req)
-    dt = time.perf_counter() - t0
+    total_hw = None
+    if args.url:
+        from .client import GatewayClient
+
+        client = GatewayClient(args.url)
+        route = None
+        if args.artifact is None and args.gpu is not None:
+            route = {"gpu": args.gpu}
+        t0 = time.perf_counter()
+        try:
+            resp = client.query(req, artifact=args.artifact, route=route)
+        except RemoteError as e:
+            raise _die(f"gateway refused the query: {e}")
+        except urllib.error.URLError as e:
+            raise _die(f"cannot reach gateway at {args.url}: {e.reason}")
+        dt = time.perf_counter() - t0
+        origin = f"via {args.url}"
+    else:
+        if args.artifact:
+            raise _die("--artifact only applies to --url (gateway) queries")
+        srv = _server(args)
+        origin = "warm" if srv.warm else "cold build"
+        total_hw = len(srv.hw)
+        t0 = time.perf_counter()
+        resp = srv.query(req)
+        dt = time.perf_counter() - t0
     feasible = resp.best_index >= 0
     out = {
         "artifact_key": resp.artifact_key,
-        "warm": was_warm,
+        "origin": origin,
         "query_s": round(dt, 4),
         "feasible": feasible,
         "best": {**resp.best_point, "index": resp.best_index,
@@ -117,26 +189,11 @@ def cmd_query(args) -> None:
             "delta_gflops": resp.best_gflops - resp.baseline_best_gflops,
         }
     if args.json:
-        json.dump(out, f := sys.stdout, indent=1)
+        json.dump(out, f := sys.stdout, indent=1, default=float)
         f.write("\n")
         return
-    b = out["best"]
-    print(f"artifact {resp.artifact_key} ({'warm' if was_warm else 'cold build'}), "
-          f"query {dt*1e3:.1f} ms")
-    if resp.best_index < 0:
-        print("no design satisfies the requested constraints "
-              "(budget/fix select an empty subspace)")
-        return
-    print(f"best:  n_SM={b['n_sm']:3d} n_V={b['n_v']:4d} M_SM={b['m_sm']:4.0f}kB "
-          f"area={b['area']:6.1f}mm^2  {b['gflops']:8.1f} GFLOP/s")
-    for r in resp.top_k[1:]:
-        print(f"       n_SM={r['n_sm']:3d} n_V={r['n_v']:4d} M_SM={r['m_sm']:4.0f}kB "
-              f"area={r['area']:6.1f}mm^2  {r['gflops']:8.1f} GFLOP/s")
-    if "pareto" in out:
-        print(f"pareto front: {out['pareto']['count']} of {len(srv.hw)} designs")
-    if "what_if" in out:
-        w = out["what_if"]
-        print(f"what-if delta vs unrestricted best: {w['delta_gflops']:+.1f} GFLOP/s")
+    print(f"artifact {resp.artifact_key} ({origin}), query {dt*1e3:.1f} ms")
+    _print_response(resp, out, total_hw)
 
 
 def cmd_build(args) -> None:
@@ -146,7 +203,7 @@ def cmd_build(args) -> None:
     print(f"artifact {srv.key}: "
           f"{'already stored' if srv.stats['artifact_loads'] else 'built'} "
           f"({time.perf_counter()-t0:.1f}s, {len(srv.hw)} hw points, "
-          f"{len(srv.workload.cells)} cells)")
+          f"{len(srv.workload.cells)} cells, gpu={srv.gpu.name})")
 
 
 def cmd_ls(args) -> None:
@@ -157,8 +214,51 @@ def cmd_ls(args) -> None:
         return
     for r in rows:
         print(f"{r['key']}  v{r['format_version']}  {r['workload']:16s} "
-              f"{r['cells']:4d} cells x {r['hw']:6d} hw  engine={r['engine']}  "
-              f"[{','.join(r['stencils'])}]")
+              f"gpu={r['gpu']:8s} {r['cells']:4d} cells x {r['hw']:6d} hw  "
+              f"engine={r['engine']}  [{','.join(r['stencils'])}]")
+
+
+def cmd_serve(args) -> None:
+    """Run the fleet gateway over every artifact under the store root(s).
+
+    Exits 2 with a one-line message (no traceback) when a root is missing
+    or holds no artifacts -- a gateway with nothing to serve is a
+    misconfiguration, not a valid idle state."""
+    from .gateway import Gateway, serve_http
+
+    # the default store joins the root list only when no root was named
+    # explicitly: `serve --root /data/fleet` must not die because the
+    # default cache dir was never created on this host
+    roots = ([args.store] if args.store else []) + (args.root or [])
+    if not roots:
+        roots = [DEFAULT_STORE]
+    try:
+        gw = Gateway(
+            roots,
+            pool_size=args.pool_size,
+            batch_window=args.batch_window,
+        )
+    except FileNotFoundError as e:
+        raise _die(str(e))
+    if len(gw) == 0:
+        raise _die(
+            f"no artifacts under {', '.join(roots)}; build one first: "
+            "python -m repro.service.cli build --store <root>"
+        )
+    httpd = serve_http(gw, host=args.host, port=args.port)
+    host, port = httpd.server_address[:2]
+    print(f"gateway: {len(gw)} artifact(s) from {len(roots)} store root(s)")
+    for row in gw.entries():
+        print(f"  {row['key']}  gpu={row['gpu']}  {row['cells']}x{row['hw']}  "
+              f"[{','.join(row['stencils'])}]")
+    # machine-parseable last line: the smoke lane reads the bound port here
+    print(f"serving on http://{host}:{port}", flush=True)
+    try:
+        httpd.serve_forever()
+    except KeyboardInterrupt:
+        pass
+    finally:
+        httpd.server_close()
 
 
 def main(argv=None) -> None:
@@ -170,6 +270,11 @@ def main(argv=None) -> None:
 
     q = sub.add_parser("query", help="answer a codesign query (sweeps on first miss)")
     _add_server_args(q)
+    q.add_argument("--url", default=None, metavar="URL",
+                   help="query a running gateway over HTTP instead of "
+                        "in-process (e.g. http://127.0.0.1:8932)")
+    q.add_argument("--artifact", default=None, metavar="KEY",
+                   help="with --url: pin the artifact content key to query")
     q.add_argument("--stencil", action="append",
                    help="stencil to weight 1.0 (repeatable)")
     q.add_argument("--freq", action="append", metavar="NAME=W",
@@ -191,6 +296,23 @@ def main(argv=None) -> None:
     ls = sub.add_parser("ls", help="list stored artifacts")
     ls.add_argument("--store", default=DEFAULT_STORE)
     ls.set_defaults(fn=cmd_ls)
+
+    s = sub.add_parser(
+        "serve", help="HTTP gateway over every stored artifact (docs/serving.md)"
+    )
+    s.add_argument("--store", default=None,
+                   help=f"artifact store directory (default {DEFAULT_STORE} "
+                        "unless --root is given)")
+    s.add_argument("--root", action="append", metavar="DIR",
+                   help="additional store root (repeatable)")
+    s.add_argument("--host", default="127.0.0.1")
+    s.add_argument("--port", type=int, default=8932,
+                   help="TCP port (0 picks a free one and prints it)")
+    s.add_argument("--pool-size", type=int, default=8,
+                   help="max resident per-artifact servers (LRU beyond)")
+    s.add_argument("--batch-window", type=float, default=0.002,
+                   help="per-artifact microbatch rendezvous window, seconds")
+    s.set_defaults(fn=cmd_serve)
 
     args = ap.parse_args(argv)
     args.fn(args)

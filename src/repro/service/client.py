@@ -1,0 +1,113 @@
+"""Thin HTTP client for a codesign gateway (stdlib ``urllib`` only).
+
+The client is a pure transport shim: it encodes with
+:mod:`repro.service.wire`, POSTs, and decodes -- so a
+:class:`~repro.service.query.QueryResponse` obtained here is the same
+object (field for field, and on the wire byte for byte) the in-process
+:class:`~repro.service.server.CodesignServer` would have returned.
+
+    from repro.service import GatewayClient, QueryRequest
+
+    c = GatewayClient("http://127.0.0.1:8932")
+    c.artifacts()                                   # routing index rows
+    c.query(QueryRequest(freqs={"heat2d": 1.0}),    # routed by selector
+            route={"gpu": "titanx"})
+
+Structured gateway failures raise :class:`repro.service.wire.RemoteError`
+with the server's error ``code`` (``unknown_artifact``, ``bad_request``,
+``ambiguous_route``, ``internal``); transport-level failures surface as
+the usual ``urllib.error.URLError``.
+"""
+
+from __future__ import annotations
+
+import json
+import urllib.error
+import urllib.request
+from typing import Any, Dict, List, Mapping, Optional
+
+from . import wire
+from .query import QueryRequest, QueryResponse
+
+__all__ = ["GatewayClient"]
+
+
+class GatewayClient:
+    """Client for one gateway base URL (e.g. ``http://host:port``)."""
+
+    def __init__(self, base_url: str, timeout: float = 30.0):
+        self.base_url = base_url.rstrip("/")
+        self.timeout = float(timeout)
+        self._last_status = 0  # HTTP status of the most recent call
+
+    # ---- transport --------------------------------------------------------
+    def _http(self, path: str, body: Optional[bytes] = None) -> bytes:
+        """One request; returns the raw body. HTTP error statuses still
+        carry wire payloads -- the body is returned (not raised) so the
+        decoder can surface the server's structured code."""
+        req = urllib.request.Request(
+            self.base_url + path,
+            data=body,
+            method="POST" if body is not None else "GET",
+            headers={"Content-Type": "application/json"},
+        )
+        try:
+            with urllib.request.urlopen(req, timeout=self.timeout) as resp:
+                self._last_status = resp.status
+                return resp.read()
+        except urllib.error.HTTPError as e:
+            self._last_status = e.code
+            return e.read()
+
+    def query_bytes(
+        self,
+        request: QueryRequest,
+        artifact: Optional[str] = None,
+        route: Optional[Mapping[str, Any]] = None,
+    ) -> bytes:
+        """The raw response body for one query -- the byte-identity tests'
+        entry point (no decode/re-encode in between)."""
+        return self._http(
+            "/v1/query", wire.encode_request(request, artifact=artifact, route=route)
+        )
+
+    # ---- API --------------------------------------------------------------
+    def query(
+        self,
+        request: QueryRequest,
+        artifact: Optional[str] = None,
+        route: Optional[Mapping[str, Any]] = None,
+    ) -> QueryResponse:
+        """Answer one request over HTTP; raises
+        :class:`~repro.service.wire.RemoteError` on structured failures."""
+        body = self.query_bytes(request, artifact=artifact, route=route)
+        return wire.decode_response(body, http_status=self._last_status)
+
+    def _json(self, path: str, body: Optional[bytes] = None) -> Dict[str, Any]:
+        """GET/POST a JSON endpoint; a non-2xx answer raises the server's
+        structured error as :class:`RemoteError` instead of a KeyError on
+        the missing success fields."""
+        raw = self._http(path, body)
+        if not 200 <= self._last_status < 300:
+            try:
+                err = json.loads(raw).get("error") or {}
+            except ValueError:
+                err = {}
+            raise wire.RemoteError(
+                str(err.get("code", "unknown")),
+                str(err.get("message", raw[:200].decode("utf-8", "replace"))),
+                self._last_status,
+            )
+        return json.loads(raw)
+
+    def artifacts(self) -> List[Dict[str, Any]]:
+        """Routing rows for every artifact the gateway serves."""
+        return self._json("/v1/artifacts")["artifacts"]
+
+    def health(self) -> Dict[str, Any]:
+        return self._json("/v1/healthz")
+
+    def refresh(self) -> int:
+        """Ask the gateway to re-scan its store roots; returns the indexed
+        artifact count."""
+        return self._json("/v1/refresh", b"")["artifacts"]

@@ -1,0 +1,414 @@
+"""Fleet gateway: one front door over many stored sweep artifacts.
+
+:class:`repro.service.server.CodesignServer` serves exactly one sweep; a
+fleet store holds one artifact per (GPU target, hardware space, lattice,
+stencil set) and a cache only pays off if all of them are reachable
+through a single long-lived endpoint. The gateway closes that gap:
+
+* **discovery / index** -- every artifact under one or more
+  :class:`~repro.service.store.ArtifactStore` roots is indexed at startup
+  (and re-indexed on demand) by its manifest-only routing attributes
+  (:meth:`repro.service.store.Artifact.routing`): content key, GPU name,
+  workload name, stencil set, hardware-space digest, engine family.
+  Indexing reads only the small JSON manifests -- no matrix is paged in;
+* **routing** -- a request names its artifact either exactly (the content
+  key) or by a *routing selector* (``{"gpu": "titanx"}``,
+  ``{"stencils": ["heat2d"]}``); :meth:`Gateway.resolve` maps selector ->
+  key, answering ``unknown_artifact`` / ``ambiguous_route`` as structured
+  errors rather than guessing. A key that misses triggers one re-scan
+  before failing, so artifacts dropped into the store after startup are
+  served without a restart;
+* **LRU server pool** -- each routed key gets a lazily-instantiated
+  per-artifact :class:`CodesignServer`
+  (:meth:`~repro.service.server.CodesignServer.from_artifact`), kept in an
+  LRU bounded by ``pool_size``: hundreds of stored artifacts never mean
+  hundreds of resident mmaps/LRUs. Evicted servers finish their in-flight
+  queries (the query path holds a reference) and are garbage-collected;
+* **HTTP transport** -- :class:`GatewayHTTPServer` (stdlib
+  ``ThreadingHTTPServer``; one thread per connection) exposes
+  ``POST /v1/query``, ``GET /v1/artifacts``, ``GET /v1/healthz`` and
+  ``POST /v1/refresh`` over the :mod:`repro.service.wire` codec.
+  Concurrent HTTP requests for the same artifact rendezvous in that
+  artifact's ``CodesignServer.query``, so the leader/follower
+  microbatching survives the process boundary unchanged.
+
+Wire format, error codes and a curl-able quickstart are documented in
+``docs/serving.md``; the request flow diagram lives in
+``docs/architecture.md``.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import threading
+from collections import OrderedDict
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+from typing import Any, Dict, List, Mapping, Optional, Sequence, Union
+
+from . import wire
+from .query import QueryRequest, QueryResponse
+from .server import CodesignServer
+from .store import ArtifactStore
+
+__all__ = [
+    "Gateway",
+    "GatewayError",
+    "UnknownArtifactError",
+    "AmbiguousRouteError",
+    "GatewayHTTPServer",
+    "serve_http",
+]
+
+#: selector names :meth:`Gateway.resolve` understands. ``stencils`` is a
+#: subset match (the artifact must serve at least those stencils); the
+#: rest are exact equality against the routing row.
+ROUTE_SELECTORS = ("key", "gpu", "workload", "stencils", "engine", "hw_digest")
+
+
+class GatewayError(Exception):
+    """Base of the gateway's structured failures; every subclass pins the
+    wire error ``code`` and the HTTP status it maps to."""
+
+    code = "internal"
+    http_status = 500
+
+
+class UnknownArtifactError(GatewayError):
+    """No stored artifact matches the requested key/selector (HTTP 404)."""
+
+    code = "unknown_artifact"
+    http_status = 404
+
+
+class AmbiguousRouteError(GatewayError):
+    """A routing selector matched more than one artifact; the message
+    carries the candidate keys so the caller can pin one (HTTP 409)."""
+
+    code = "ambiguous_route"
+    http_status = 409
+
+
+class Gateway:
+    """Route :class:`QueryRequest` s across every artifact in one or more
+    store roots (see the module docstring for the moving parts).
+
+    Parameters
+    ----------
+    roots:
+        One path or a sequence of paths to artifact store directories.
+        Roots must exist (:class:`UnknownArtifactError` is *not* the right
+        failure for a typo'd path): a missing root raises
+        ``FileNotFoundError`` immediately.
+    pool_size:
+        Max resident per-artifact servers (LRU-evicted beyond this).
+    batch_window / lru_size:
+        Forwarded to each pooled :class:`CodesignServer` /
+        :class:`~repro.service.query.QueryEngine`.
+    """
+
+    def __init__(
+        self,
+        roots: Union[str, Sequence[str]],
+        pool_size: int = 8,
+        batch_window: float = 0.002,
+        lru_size: int = 256,
+    ):
+        if isinstance(roots, (str, os.PathLike)):
+            roots = [roots]
+        if not roots:
+            raise ValueError("gateway needs at least one store root")
+        self.stores = [ArtifactStore(r, create=False) for r in roots]
+        self.pool_size = int(pool_size)
+        if self.pool_size < 1:
+            raise ValueError("pool_size must be >= 1")
+        self.batch_window = float(batch_window)
+        self.lru_size = int(lru_size)
+        self._mu = threading.Lock()  # guards _index and _pool
+        self._index: "OrderedDict[str, Dict[str, Any]]" = OrderedDict()
+        self._pool: "OrderedDict[str, CodesignServer]" = OrderedDict()
+        self.stats: Dict[str, int] = {
+            "requests": 0,
+            "routed_by_key": 0,
+            "routed_by_selector": 0,
+            "unknown": 0,
+            "pool_hits": 0,
+            "pool_instantiations": 0,
+            "pool_evictions": 0,
+            "rescans": 0,
+        }
+        self.refresh()
+
+    # ---- discovery --------------------------------------------------------
+    def refresh(self) -> int:
+        """Re-scan every root and rebuild the routing index from manifests
+        (cheap: JSON only). Returns the number of indexed artifacts.
+        Already-pooled servers for keys that disappeared are dropped."""
+        index: "OrderedDict[str, Dict[str, Any]]" = OrderedDict()
+        for store in self.stores:
+            for row in store.entries():
+                # first root wins on (content-addressed) key collisions --
+                # identical keys name identical bytes, so either copy serves
+                index.setdefault(row["key"], {**row, "store": store})
+        with self._mu:
+            self._index = index
+            self.stats["rescans"] += 1
+            for key in [k for k in self._pool if k not in index]:
+                del self._pool[key]
+        return len(index)
+
+    def keys(self) -> List[str]:
+        with self._mu:
+            return list(self._index)
+
+    def entries(self) -> List[Dict[str, Any]]:
+        """Routing rows (sans store handles) -- the ``/v1/artifacts``
+        payload."""
+        with self._mu:
+            return [
+                {k: v for k, v in row.items() if k != "store"}
+                for row in self._index.values()
+            ]
+
+    def __len__(self) -> int:
+        with self._mu:
+            return len(self._index)
+
+    # ---- routing ----------------------------------------------------------
+    def _match(self, route: Mapping[str, Any]) -> List[str]:
+        unknown = set(route) - set(ROUTE_SELECTORS)
+        if unknown:
+            raise ValueError(
+                f"unknown route selector(s) {sorted(unknown)} "
+                f"(want one of {list(ROUTE_SELECTORS)})"
+            )
+        with self._mu:
+            rows = list(self._index.values())
+        out = []
+        for row in rows:
+            ok = True
+            for name, want in route.items():
+                if name == "stencils":
+                    want_set = {want} if isinstance(want, str) else set(want)
+                    ok = want_set <= set(row["stencils"])
+                else:
+                    ok = row.get(name) == want
+                if not ok:
+                    break
+            if ok:
+                out.append(row["key"])
+        return out
+
+    def resolve(
+        self,
+        artifact: Optional[str] = None,
+        route: Optional[Mapping[str, Any]] = None,
+    ) -> str:
+        """Map (key | selector | nothing) -> one content key.
+
+        An exact ``artifact`` key wins over ``route``. A miss triggers one
+        on-demand :meth:`refresh` (new artifacts appear without a restart)
+        before raising :class:`UnknownArtifactError`; a selector matching
+        several artifacts raises :class:`AmbiguousRouteError` listing the
+        candidates. With neither argument, a single-artifact gateway
+        serves its only artifact and a multi-artifact one refuses to
+        guess."""
+        for attempt in range(2):
+            if artifact is not None:
+                with self._mu:
+                    if artifact in self._index:
+                        self.stats["routed_by_key"] += 1
+                        return artifact
+            elif route:
+                matches = self._match(route)
+                if len(matches) == 1:
+                    with self._mu:
+                        self.stats["routed_by_selector"] += 1
+                    return matches[0]
+                if len(matches) > 1:
+                    raise AmbiguousRouteError(
+                        f"route {dict(route)} matches {len(matches)} artifacts "
+                        f"({', '.join(sorted(matches))}); pin one with 'artifact'"
+                    )
+            else:
+                with self._mu:
+                    if len(self._index) == 1:
+                        self.stats["routed_by_key"] += 1
+                        return next(iter(self._index))
+                    n = len(self._index)
+                if n > 1:
+                    raise AmbiguousRouteError(
+                        f"gateway serves {n} artifacts; name one via 'artifact' "
+                        "or a 'route' selector"
+                    )
+            if attempt == 0:
+                self.refresh()  # on-demand discovery before giving up
+        with self._mu:
+            self.stats["unknown"] += 1
+        what = (
+            f"artifact {artifact!r}" if artifact is not None
+            else f"route {dict(route)}" if route
+            else "empty store"
+        )
+        raise UnknownArtifactError(
+            f"no stored artifact matches {what} "
+            f"({len(self)} artifacts indexed; GET /v1/artifacts lists them)"
+        )
+
+    # ---- server pool ------------------------------------------------------
+    def server_for(self, key: str) -> CodesignServer:
+        """The pooled per-artifact server for an (already resolved) key,
+        instantiating (and LRU-evicting) as needed."""
+        with self._mu:
+            srv = self._pool.get(key)
+            if srv is not None:
+                self._pool.move_to_end(key)
+                self.stats["pool_hits"] += 1
+                return srv
+            row = self._index.get(key)
+        if row is None:
+            raise UnknownArtifactError(f"artifact {key!r} is not indexed")
+        store: ArtifactStore = row["store"]
+        art = store.get(key)
+        if art is None:  # deleted between index and query
+            self.refresh()
+            raise UnknownArtifactError(f"artifact {key!r} vanished from {store.root}")
+        srv = CodesignServer.from_artifact(
+            store, art, batch_window=self.batch_window, lru_size=self.lru_size
+        )
+        with self._mu:
+            # a racing thread may have built it meanwhile; keep the first
+            winner = self._pool.setdefault(key, srv)
+            if winner is srv:
+                self.stats["pool_instantiations"] += 1
+            srv = winner
+            self._pool.move_to_end(key)
+            while len(self._pool) > self.pool_size:
+                self._pool.popitem(last=False)  # in-flight queries hold refs
+                self.stats["pool_evictions"] += 1
+        return srv
+
+    # ---- queries ----------------------------------------------------------
+    def query(
+        self,
+        request: QueryRequest,
+        artifact: Optional[str] = None,
+        route: Optional[Mapping[str, Any]] = None,
+    ) -> QueryResponse:
+        """Route one request to its artifact's server (microbatching with
+        any concurrent caller of the same artifact) and answer it."""
+        with self._mu:
+            self.stats["requests"] += 1
+        key = self.resolve(artifact, route)
+        return self.server_for(key).query(request)
+
+    def health(self) -> Dict[str, Any]:
+        with self._mu:
+            return {
+                "ok": True,
+                "artifacts": len(self._index),
+                "pooled_servers": len(self._pool),
+                "pool_size": self.pool_size,
+                "roots": [s.root for s in self.stores],
+                "stats": dict(self.stats),
+            }
+
+
+# ---------------------------------------------------------------------------
+# HTTP transport
+# ---------------------------------------------------------------------------
+class _Handler(BaseHTTPRequestHandler):
+    """Maps the wire codec onto HTTP. All bodies are JSON; failures are
+    :func:`repro.service.wire.encode_error` payloads (never tracebacks)."""
+
+    server_version = "repro-gateway/1"
+    protocol_version = "HTTP/1.1"  # keep-alive: clients reuse connections
+
+    # silence the default per-request stderr line (benchmarks hammer this)
+    def log_message(self, fmt, *args):  # noqa: ARG002
+        pass
+
+    @property
+    def gateway(self) -> Gateway:
+        return self.server.gateway  # type: ignore[attr-defined]
+
+    def _send(self, status: int, body: bytes, content_type="application/json") -> None:
+        self.send_response(status)
+        self.send_header("Content-Type", content_type)
+        self.send_header("Content-Length", str(len(body)))
+        if self.close_connection:
+            self.send_header("Connection", "close")
+        self.end_headers()
+        self.wfile.write(body)
+
+    def _send_error(self, status: int, code: str, message: str) -> None:
+        # one request per connection on failures: simpler client recovery
+        # than reasoning about keep-alive state after an error
+        self.close_connection = True
+        self._send(status, wire.encode_error(code, message))
+
+    def do_GET(self) -> None:  # noqa: N802 - BaseHTTPRequestHandler API
+        if self.path == "/v1/healthz":
+            body = json.dumps(self.gateway.health(), sort_keys=True).encode()
+            self._send(200, body)
+        elif self.path == "/v1/artifacts":
+            body = json.dumps(
+                {"v": wire.WIRE_VERSION, "artifacts": self.gateway.entries()},
+                sort_keys=True,
+            ).encode()
+            self._send(200, body)
+        else:
+            self._send_error(404, "not_found", f"no such endpoint {self.path!r}")
+
+    def do_POST(self) -> None:  # noqa: N802
+        try:
+            # always drain the body first: with keep-alive, unread body
+            # bytes would be misparsed as the connection's next request line
+            length = int(self.headers.get("Content-Length", 0))
+            data = self.rfile.read(length)
+            if self.path == "/v1/refresh":
+                n = self.gateway.refresh()
+                self._send(200, json.dumps({"ok": True, "artifacts": n}).encode())
+                return
+            if self.path != "/v1/query":
+                self._send_error(404, "not_found", f"no such endpoint {self.path!r}")
+                return
+            request, artifact, route = wire.decode_request(data)
+            response = self.gateway.query(request, artifact=artifact, route=route)
+            self._send(200, wire.encode_response(response))
+        except wire.WireError as e:
+            self._send_error(400, e.code, str(e))
+        except GatewayError as e:
+            self._send_error(e.http_status, e.code, str(e))
+        except (KeyError, ValueError) as e:
+            # engine-level rejections (unknown stencil, bad shapes, bad
+            # selector names): the request is at fault, not the server
+            msg = e.args[0] if e.args else str(e)
+            self._send_error(400, "bad_request", str(msg))
+        except BrokenPipeError:  # client went away mid-answer
+            pass
+        except Exception as e:  # noqa: BLE001 - boundary: never leak a traceback
+            self._send_error(500, "internal", f"{type(e).__name__}: {e}")
+
+
+class GatewayHTTPServer(ThreadingHTTPServer):
+    """Threaded HTTP front end over one :class:`Gateway` (stdlib only).
+
+    One thread per connection; threads answering the same artifact
+    rendezvous inside that artifact's ``CodesignServer`` microbatch.
+    ``daemon_threads`` keeps shutdown prompt."""
+
+    daemon_threads = True
+
+    def __init__(self, address, gateway: Gateway):
+        super().__init__(address, _Handler)
+        self.gateway = gateway
+
+
+def serve_http(
+    gateway: Gateway, host: str = "127.0.0.1", port: int = 0
+) -> GatewayHTTPServer:
+    """Bind (``port=0`` picks a free one -- see ``server_address``) and
+    return the server; the caller drives ``serve_forever()``, typically on
+    a daemon thread (tests, benchmarks) or the main thread (the CLI)."""
+    return GatewayHTTPServer((host, port), gateway)

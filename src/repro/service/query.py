@@ -43,6 +43,9 @@ class QueryRequest:
     design parameters equal the given values compete (e.g.
     ``{"n_sm": 16}``); the response also carries the unrestricted
     baseline's best so the delta is one subtraction away.
+
+    Requests cross process boundaries via :mod:`repro.service.wire`; every
+    field here is a wire field (``docs/serving.md`` documents each one).
     """
 
     freqs: Optional[Mapping[str, float]] = None
@@ -59,7 +62,12 @@ class QueryRequest:
 class QueryResponse:
     """``best_index == -1`` (empty ``best_point``/``top_k``,
     ``best_gflops == -inf``) means NO design satisfies the request's
-    budget/fix constraints -- never an arbitrary fallback design."""
+    budget/fix constraints -- never an arbitrary fallback design.
+
+    Crosses process boundaries via :mod:`repro.service.wire`
+    (``encode_response``/``decode_response``); the encoding is canonical,
+    so equal responses always serialize to identical bytes (field
+    reference: ``docs/serving.md``)."""
 
     artifact_key: str
     best_index: int

@@ -13,6 +13,11 @@ queries (consumers):
   window; the leader stacks every pending frequency vector into one
   ``(B, cells) @ (cells, hw)`` matmul and distributes the rows. Amortizes
   memory traffic over the big matrix exactly like batched inference.
+
+One server serves one configured sweep. The fleet front-end over *many*
+stored sweeps is :class:`repro.service.gateway.Gateway`, which constructs
+its pooled servers via :meth:`CodesignServer.from_artifact` (warm-only;
+the miss path is unreachable).
 """
 
 from __future__ import annotations
@@ -21,14 +26,21 @@ import threading
 import time
 from typing import Dict, List, Optional, Sequence
 
+import numpy as np
+
 from repro.core.area import LinearAreaModel, MAXWELL
-from repro.core.codesign import HardwareSpace, codesign, enumerate_hw_space
+from repro.core.codesign import (
+    CodesignResult,
+    HardwareSpace,
+    codesign,
+    enumerate_hw_space,
+)
 from repro.core.solver import LATTICE_2D, LATTICE_3D, TileLattice
 from repro.core.timemodel import GPUSpec, MAXWELL_GPU
 from repro.core.workload import Workload, paper_workload
 
 from .query import QueryEngine, QueryRequest, QueryResponse
-from .store import ArtifactStore
+from .store import Artifact, ArtifactStore
 
 __all__ = ["CodesignServer"]
 
@@ -116,6 +128,70 @@ class CodesignServer:
             "artifact_builds": 0,
             "artifact_loads": 0,
         }
+
+    @classmethod
+    def from_artifact(
+        cls,
+        store: ArtifactStore,
+        artifact: Artifact,
+        batch_window: float = 0.002,
+        lru_size: int = 256,
+    ) -> "CodesignServer":
+        """Wrap an already-stored artifact as a warm server (never sweeps).
+
+        This is the gateway's constructor: a discovered artifact's manifest
+        is parsed back into the server's configuration (workload, GPU,
+        hardware space, lattices, resolved engine family), the content
+        address is recomputed and checked against the artifact's own key --
+        a mismatch means the manifest does not describe the matrix and the
+        artifact must not be served -- and the query engine is pre-seeded,
+        so the miss path is unreachable. Only the small npz hardware
+        columns are materialized here; the ``(C, H)`` matrix stays an
+        untouched mmap until the first query needs a row.
+        """
+        m = artifact.manifest
+        workload, gpu, lattices = CodesignResult.parse_manifest(m)
+        # the spec records the exact (2d, 3d) lattice pair the key was
+        # digested over -- including a lattice for a dimensionality the
+        # workload never used, which the per-cell tables cannot recover
+        spec_lat = m.get("spec", {}).get("lattices")
+        if spec_lat:
+            lat2, lat3 = (
+                TileLattice(**{k: tuple(int(x) for x in v) for k, v in spec_lat[d].items()})
+                for d in ("2d", "3d")
+            )
+        else:  # pre-spec manifests: per-cell tables + defaults
+            lat2 = next((lat for lat in lattices if len(lat.t_s3) == 1), LATTICE_2D)
+            lat3 = next((lat for lat in lattices if len(lat.t_s3) > 1), LATTICE_3D)
+        hw = HardwareSpace(
+            n_sm=np.asarray(artifact.hw_n_sm, np.float64),
+            n_v=np.asarray(artifact.hw_n_v, np.float64),
+            m_sm=np.asarray(artifact.hw_m_sm, np.float64),
+            area=np.asarray(artifact.hw_area, np.float64),
+        )
+        # the spec's engine is already the resolved matrix *family*
+        # ("jax"/"numpy"), so the recomputed key cannot drift with the
+        # loading host's device count or jax availability.
+        engine = m.get("spec", {}).get("engine") or m.get("engine", "auto")
+        srv = cls(
+            store,
+            workload=workload,
+            gpu=gpu,
+            hw=hw,
+            engine=engine,
+            lattice_2d=lat2,
+            lattice_3d=lat3,
+            batch_window=batch_window,
+            lru_size=lru_size,
+        )
+        if srv.key != artifact.key:
+            raise ValueError(
+                f"artifact {artifact.key} does not reproduce its own content "
+                f"address (got {srv.key}); refusing to serve it"
+            )
+        srv._engine = QueryEngine(artifact, lru_size=lru_size)
+        srv.stats["artifact_loads"] += 1
+        return srv
 
     # ---- artifact lifecycle ----------------------------------------------
     def ensure_artifact(self) -> QueryEngine:

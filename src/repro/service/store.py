@@ -176,12 +176,39 @@ class Artifact:
             seen.setdefault(c["stencil"]["name"])
         return list(seen)
 
+    def routing(self) -> Dict[str, object]:
+        """The manifest-only attribute row a gateway indexes this artifact
+        under: content key, GPU target, workload name, stencil set,
+        hardware-space digest, resolved engine family, and shapes.
+
+        Derivable from the (small) JSON manifest alone -- listing a fleet
+        store never mmaps a matrix. Falls back to recomputing the fields
+        for artifacts written before the manifest grew a ``"routing"``
+        block (same format version, older writer)."""
+        m = self.manifest
+        spec = m.get("spec", {})
+        r = dict(m.get("routing") or {})
+        r.setdefault("gpu", m["gpu"]["name"])
+        r.setdefault("workload", m["workload"]["name"])
+        r.setdefault("stencils", sorted(self.stencil_names))
+        r.update(
+            key=self.key,
+            hw_digest=spec.get("hw_digest"),
+            engine=spec.get("engine", m.get("engine")),
+            cells=self.n_cells,
+            hw=self.n_hw,
+            format_version=m.get("format_version"),
+        )
+        return r
+
     def cell_freqs(self) -> np.ndarray:
+        """(C,) stored workload frequencies (the artifact's own mix)."""
         return np.array(
             [c["freq"] for c in self.manifest["workload"]["cells"]], np.float64
         )
 
     def cell_flops(self) -> np.ndarray:
+        """(C,) useful flops per cell -- the GFLOP/s numerator."""
         out = np.empty(self.n_cells, np.float64)
         for i, c in enumerate(self.manifest["workload"]["cells"]):
             sz = c["size"]
@@ -234,6 +261,7 @@ class Artifact:
         return cols[name]
 
     def point(self, i: int) -> Dict[str, float]:
+        """Design parameters of hardware point ``i`` as a plain dict."""
         return {
             "n_sm": int(self.hw_n_sm[i]),
             "n_v": int(self.hw_n_v[i]),
@@ -256,11 +284,19 @@ class Artifact:
 
 
 class ArtifactStore:
-    """Directory of content-addressed sweep artifacts."""
+    """Directory of content-addressed sweep artifacts.
 
-    def __init__(self, root: str):
+    ``create=False`` opens an existing root without creating it (a serving
+    front-end must not silently conjure empty stores out of typo'd paths);
+    the default keeps the build-path ergonomics of ``put`` into a fresh
+    directory."""
+
+    def __init__(self, root: str, create: bool = True):
         self.root = os.path.abspath(root)
-        os.makedirs(self.root, exist_ok=True)
+        if create:
+            os.makedirs(self.root, exist_ok=True)
+        elif not os.path.isdir(self.root):
+            raise FileNotFoundError(f"artifact store root {self.root!r} does not exist")
 
     # ---- keys -------------------------------------------------------------
     def key_for(
@@ -320,6 +356,7 @@ class ArtifactStore:
                     os.close(ent[0])
 
     def has(self, key: str) -> bool:
+        """True iff ``key`` is stored AND readable at this format version."""
         return self.get(key) is not None
 
     def get(self, key: str) -> Optional[Artifact]:
@@ -398,6 +435,7 @@ class ArtifactStore:
         return art
 
     def keys(self) -> List[str]:
+        """Sorted content keys of every (complete) stored artifact."""
         return sorted(
             d for d in os.listdir(self.root)
             if os.path.exists(os.path.join(self.root, d, "manifest.json"))
@@ -405,20 +443,7 @@ class ArtifactStore:
         )
 
     def entries(self) -> List[Dict]:
-        """One summary row per stored artifact (the CLI's ``ls``)."""
-        out = []
-        for k in self.keys():
-            art = Artifact(self._path(k))
-            m = art.manifest
-            out.append(
-                {
-                    "key": k,
-                    "format_version": m.get("format_version"),
-                    "workload": m["workload"]["name"],
-                    "stencils": art.stencil_names,
-                    "cells": m["shapes"]["cells"],
-                    "hw": m["shapes"]["hw"],
-                    "engine": m.get("engine"),
-                }
-            )
-        return out
+        """One routing-attribute row per stored artifact (the CLI's ``ls``
+        and the raw material of the gateway's index); manifest-only, so
+        listing a large store never touches a matrix."""
+        return [Artifact(self._path(k)).routing() for k in self.keys()]

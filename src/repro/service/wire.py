@@ -1,0 +1,293 @@
+"""Versioned HTTP/JSON wire codec for the codesign query service.
+
+This module is the single source of truth for how a
+:class:`repro.service.query.QueryRequest` and its
+:class:`~repro.service.query.QueryResponse` cross a process boundary.
+Everything else (the gateway's HTTP handler, the thin client, the CLI's
+``--url`` mode, the CI smoke lane) encodes and decodes through these four
+functions, so the in-process objects and the wire can never drift apart:
+
+* :func:`encode_request` / :func:`decode_request` -- request envelope
+  (``{"v", "artifact", "route", "request"}``);
+* :func:`encode_response` / :func:`decode_response` -- response envelope
+  (``{"v", "ok", "response"}`` on success, ``{"v", "ok", "error"}`` on
+  failure);
+* :func:`encode_error` -- structured error payloads (``code`` +
+  ``message``), never tracebacks.
+
+Design rules (documented for clients in ``docs/serving.md``):
+
+* **Canonical bytes.** Encoders emit ``sort_keys=True`` +
+  ``separators=(",", ":")`` JSON, and Python's ``repr``-based float
+  serialization round-trips every float64 exactly. Encoding is therefore
+  deterministic: the same ``QueryResponse`` always produces the same
+  bytes, which is what lets tests (and the CI smoke lane) assert that an
+  HTTP answer is *byte-identical* to the in-process answer.
+* **Non-finite floats.** Strict JSON has no ``inf``/``nan``, but the
+  service's contract does (``best_gflops = -inf`` means "no feasible
+  design"). Non-finite floats are encoded as a tagged object
+  ``{"$f": "inf" | "-inf" | "nan"}`` and decoded back to the exact float.
+* **Versioning.** Every envelope carries ``"v": WIRE_VERSION``. A server
+  rejects requests whose major version it does not speak
+  (``unsupported_version``); a *client* decoding a response tolerates
+  unknown **response** fields (servers may add fields within a version),
+  while a *server* rejects unknown **request** fields (a typo'd field
+  silently ignored would answer the wrong question).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+from typing import Any, Dict, Mapping, Optional, Tuple
+
+import numpy as np
+
+from .query import QueryRequest, QueryResponse
+
+__all__ = [
+    "WIRE_VERSION",
+    "WireError",
+    "RemoteError",
+    "encode_request",
+    "decode_request",
+    "encode_response",
+    "decode_response",
+    "encode_error",
+]
+
+#: Wire (envelope) version. Bump only for incompatible envelope changes;
+#: additive response fields do NOT bump it (clients ignore unknowns).
+WIRE_VERSION = 1
+
+#: request fields a v1 server accepts, mirroring QueryRequest exactly.
+_REQUEST_FIELDS = frozenset(f.name for f in dataclasses.fields(QueryRequest))
+
+
+class WireError(ValueError):
+    """A request that cannot be decoded (malformed JSON, wrong types,
+    unknown fields, unsupported version). Maps to HTTP 400."""
+
+    def __init__(self, message: str, code: str = "bad_request"):
+        super().__init__(message)
+        self.code = code
+
+
+class RemoteError(RuntimeError):
+    """A structured error answer from a gateway (the client-side mirror of
+    :func:`encode_error`); carries the server's ``code`` and HTTP status."""
+
+    def __init__(self, code: str, message: str, http_status: int = 0):
+        super().__init__(f"[{code}] {message}")
+        self.code = code
+        self.message = message
+        self.http_status = http_status
+
+
+# ---------------------------------------------------------------------------
+# float / array tagging
+# ---------------------------------------------------------------------------
+_NONFINITE = {"inf": math.inf, "-inf": -math.inf}
+
+
+def _jsonify(obj: Any) -> Any:
+    """Recursively convert to strict-JSON-safe values: numpy scalars/arrays
+    to native, non-finite floats to ``{"$f": ...}`` tags."""
+    if isinstance(obj, (np.floating, np.integer)):
+        obj = obj.item()
+    if isinstance(obj, float):
+        if math.isfinite(obj):
+            return obj
+        if math.isnan(obj):
+            return {"$f": "nan"}
+        return {"$f": "inf" if obj > 0 else "-inf"}
+    if isinstance(obj, np.ndarray):
+        return [_jsonify(x) for x in obj.tolist()]
+    if isinstance(obj, dict):
+        return {str(k): _jsonify(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [_jsonify(x) for x in obj]
+    return obj
+
+
+def _unjsonify(obj: Any) -> Any:
+    """Invert :func:`_jsonify` (tags back to floats)."""
+    if isinstance(obj, dict):
+        if set(obj) == {"$f"}:
+            tag = obj["$f"]
+            if tag == "nan":
+                return math.nan
+            if tag in _NONFINITE:
+                return _NONFINITE[tag]
+            raise WireError(f"unknown non-finite float tag {tag!r}")
+        return {k: _unjsonify(v) for k, v in obj.items()}
+    if isinstance(obj, list):
+        return [_unjsonify(x) for x in obj]
+    return obj
+
+
+def _dumps(obj: Any) -> bytes:
+    return json.dumps(
+        _jsonify(obj), sort_keys=True, separators=(",", ":"), allow_nan=False
+    ).encode()
+
+
+def _loads(data: bytes) -> Any:
+    try:
+        return json.loads(data.decode("utf-8"))
+    except (UnicodeDecodeError, json.JSONDecodeError) as e:
+        raise WireError(f"malformed JSON: {e}") from e
+
+
+def _check_version(obj: Any, what: str) -> None:
+    if not isinstance(obj, dict):
+        raise WireError(f"{what} must be a JSON object, got {type(obj).__name__}")
+    v = obj.get("v")
+    if v != WIRE_VERSION:
+        raise WireError(
+            f"unsupported wire version {v!r} (this endpoint speaks v{WIRE_VERSION})",
+            code="unsupported_version",
+        )
+
+
+# ---------------------------------------------------------------------------
+# requests
+# ---------------------------------------------------------------------------
+def encode_request(
+    request: QueryRequest,
+    artifact: Optional[str] = None,
+    route: Optional[Mapping[str, Any]] = None,
+) -> bytes:
+    """Serialize one query. ``artifact`` pins a content-address key;
+    ``route`` is a routing selector the gateway resolves (e.g.
+    ``{"gpu": "titanx"}``); both ``None`` is valid on a one-artifact
+    gateway."""
+    body: Dict[str, Any] = {
+        "v": WIRE_VERSION,
+        "request": dataclasses.asdict(request),
+    }
+    if artifact is not None:
+        body["artifact"] = str(artifact)
+    if route:
+        body["route"] = dict(route)
+    return _dumps(body)
+
+
+def decode_request(data: bytes) -> Tuple[QueryRequest, Optional[str], Optional[dict]]:
+    """Bytes -> ``(QueryRequest, artifact_key, route)``.
+
+    Raises :class:`WireError` on malformed JSON, a version this codec does
+    not speak, non-object envelopes, or unknown request fields (strict on
+    purpose: a silently dropped field would answer a different question
+    than the client asked).
+    """
+    obj = _loads(data)
+    _check_version(obj, "request envelope")
+    unknown = set(obj) - {"v", "artifact", "route", "request"}
+    if unknown:
+        raise WireError(f"unknown envelope fields {sorted(unknown)}")
+    artifact = obj.get("artifact")
+    if artifact is not None and not isinstance(artifact, str):
+        raise WireError("'artifact' must be a string key")
+    route = obj.get("route")
+    if route is not None and not isinstance(route, dict):
+        raise WireError("'route' must be an object of selector: value pairs")
+    req = obj.get("request")
+    if not isinstance(req, dict):
+        raise WireError("'request' must be an object (the QueryRequest fields)")
+    req = _unjsonify(req)
+    unknown = set(req) - _REQUEST_FIELDS
+    if unknown:
+        raise WireError(
+            f"unknown request fields {sorted(unknown)} "
+            f"(v{WIRE_VERSION} accepts {sorted(_REQUEST_FIELDS)})"
+        )
+    try:
+        # coerce scalars so garbage fails HERE (bad_request) rather than
+        # deep inside the engine -- and so a JSON "450" behaves like 450
+        # instead of poisoning later comparisons with a str
+        for name, conv in (("max_area", float), ("min_area", float),
+                           ("top_k", int)):
+            if name in req:
+                req[name] = conv(req[name])
+        for name in ("pareto", "use_cache"):
+            if name in req and not isinstance(req[name], bool):
+                raise WireError(f"{name!r} must be a boolean")
+        request = QueryRequest(**req)
+        if request.freqs is not None and not isinstance(request.freqs, dict):
+            raise WireError("'freqs' must be an object of stencil: weight")
+        if request.fix is not None and not isinstance(request.fix, dict):
+            raise WireError("'fix' must be an object of param: value")
+    except WireError:
+        raise
+    except (TypeError, ValueError) as e:
+        raise WireError(f"bad request field: {e}") from e
+    return request, artifact, route
+
+
+# ---------------------------------------------------------------------------
+# responses / errors
+# ---------------------------------------------------------------------------
+def encode_response(response: QueryResponse) -> bytes:
+    """Serialize a success answer. Deterministic (canonical JSON), so two
+    equal responses always encode to identical bytes -- the property the
+    gateway's byte-identity acceptance test leans on."""
+    r: Dict[str, Any] = {
+        "artifact_key": response.artifact_key,
+        "best_index": int(response.best_index),
+        "best_gflops": float(response.best_gflops),
+        "best_weighted_time": float(response.best_weighted_time),
+        "best_point": dict(response.best_point),
+        "top_k": [dict(t) for t in response.top_k],
+        "cached": bool(response.cached),
+        "batch_size": int(response.batch_size),
+    }
+    if response.pareto_indices is not None:
+        r["pareto_indices"] = [int(i) for i in np.asarray(response.pareto_indices)]
+    if response.baseline_best_index is not None:
+        r["baseline_best_index"] = int(response.baseline_best_index)
+        r["baseline_best_gflops"] = float(response.baseline_best_gflops)
+    return _dumps({"v": WIRE_VERSION, "ok": True, "response": r})
+
+
+def decode_response(data: bytes, http_status: int = 0) -> QueryResponse:
+    """Bytes -> :class:`QueryResponse`. A structured error envelope raises
+    :class:`RemoteError`; unknown *response* fields are ignored (additive
+    server evolution within a wire version)."""
+    obj = _loads(data)
+    _check_version(obj, "response envelope")
+    if not obj.get("ok"):
+        err = obj.get("error") or {}
+        raise RemoteError(
+            str(err.get("code", "unknown")),
+            str(err.get("message", "(no message)")),
+            http_status,
+        )
+    r = obj.get("response")
+    if not isinstance(r, dict):
+        raise WireError("'response' must be an object")
+    r = _unjsonify(r)
+    pareto = r.get("pareto_indices")
+    return QueryResponse(
+        artifact_key=r["artifact_key"],
+        best_index=int(r["best_index"]),
+        best_gflops=float(r["best_gflops"]),
+        best_weighted_time=float(r["best_weighted_time"]),
+        best_point=r["best_point"],
+        top_k=list(r["top_k"]),
+        pareto_indices=None if pareto is None else np.asarray(pareto, np.int64),
+        baseline_best_index=r.get("baseline_best_index"),
+        baseline_best_gflops=r.get("baseline_best_gflops"),
+        cached=bool(r.get("cached", False)),
+        batch_size=int(r.get("batch_size", 1)),
+    )
+
+
+def encode_error(code: str, message: str) -> bytes:
+    """Structured failure payload (the only thing a gateway ever sends on
+    error -- clients never parse tracebacks)."""
+    return _dumps(
+        {"v": WIRE_VERSION, "ok": False,
+         "error": {"code": str(code), "message": str(message)}}
+    )
