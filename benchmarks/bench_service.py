@@ -54,12 +54,13 @@ STENCIL_NAMES = (
 )
 
 
-def _mixes(rng: np.random.Generator, n: int):
+def _mixes(rng: np.random.Generator, n: int, use_cache: bool = True):
     return [
         QueryRequest(
             freqs=dict(zip(STENCIL_NAMES, rng.uniform(0.05, 1.0, size=6))),
             max_area=650.0,
             top_k=3,
+            use_cache=use_cache,
         )
         for _ in range(n)
     ]
@@ -160,21 +161,58 @@ def run() -> None:
 
     httpd = serve_http(gw)
     threading.Thread(target=httpd.serve_forever, daemon=True).start()
-    client = GatewayClient("http://%s:%d" % httpd.server_address[:2])
-    reqs = _mixes(rng, N_MIXES)
+    url = "http://%s:%d" % httpd.server_address[:2]
     try:
+        # one request set, LRU bypassed (use_cache=False), for all three
+        # HTTP stages: transport is the ONLY variable in the A/B -- fresh
+        # mixes per stage would confound it with reduction-cost variance,
+        # shared mixes WITH the LRU would hand later stages cache hits.
+        reqs = _mixes(rng, N_MIXES, use_cache=False)
+
+        # (a) BEFORE: one TCP connection per request (the pre-PR5 client
+        # behavior, kept behind keepalive=False for exactly this A/B) --
+        # ROADMAP attributes most of the wire tax to connection setup.
+        client = GatewayClient(url, keepalive=False)
+        t0 = time.perf_counter()
+        for i, r in enumerate(reqs):
+            client.query(r, artifact=targets[i % 2])
+        t_http_cpr = time.perf_counter() - t0
+
+        # (b) AFTER: one persistent keep-alive connection, same mixes.
+        client = GatewayClient(url)
         t0 = time.perf_counter()
         for i, r in enumerate(reqs):
             client.query(r, artifact=targets[i % 2])
         t_http = time.perf_counter() - t0
+
+        # (c) batched wire: the same N routed queries in ONE
+        # /v1/query_many round trip (per-artifact stacked matmuls).
+        batch_http = [(r, targets[i % 2], None) for i, r in enumerate(reqs)]
+        t0 = time.perf_counter()
+        results = client.query_many(batch_http)
+        t_http_many = time.perf_counter() - t0
+        assert all(not isinstance(x, Exception) for x in results)
     finally:
         httpd.shutdown()
         httpd.server_close()
+    qps_http_cpr = len(reqs) / t_http_cpr
     qps_gw_http = len(reqs) / t_http
+    qps_http_many = len(batch_http) / t_http_many
+    emit(
+        "service_gateway_http_conn_per_req", t_http_cpr / len(reqs) * 1e6,
+        f"HTTP, new connection per request: {qps_http_cpr:.0f} q/s "
+        f"({qps_gw_local / qps_http_cpr:.1f}x wire tax)",
+    )
     emit(
         "service_gateway_http", t_http / len(reqs) * 1e6,
-        f"same routed mixes over the HTTP wire: {qps_gw_http:.0f} q/s "
-        f"({qps_gw_local / qps_gw_http:.1f}x wire tax)",
+        f"HTTP, persistent connection: {qps_gw_http:.0f} q/s "
+        f"({qps_gw_local / qps_gw_http:.1f}x wire tax, "
+        f"{qps_gw_http / qps_http_cpr:.1f}x vs per-request connections)",
+    )
+    emit(
+        "service_gateway_http_batched", t_http_many / len(batch_http) * 1e6,
+        f"one /v1/query_many round trip (B={len(batch_http)}): "
+        f"{qps_http_many:.0f} q/s",
     )
 
     append_trajectory(
@@ -189,6 +227,8 @@ def run() -> None:
             "warm_lru_qps": round(len(reqs) / t_lru, 1),
             "batched_qps": round(len(batch) / t_batch, 1),
             "gateway_local_qps": round(qps_gw_local, 1),
+            "gateway_http_conn_per_req_qps": round(qps_http_cpr, 1),
             "gateway_http_qps": round(qps_gw_http, 1),
+            "gateway_http_batched_qps": round(qps_http_many, 1),
         },
     )

@@ -9,6 +9,8 @@ Prints ``name,us_per_call,derived`` CSV lines (harness contract).
   bench_cache_removal       -- SV.A      cache-less comparison
   bench_resource_allocation -- Fig. 4    area-fraction clustering
   bench_kernels             -- workload  Pallas stencil kernels vs oracle
+  bench_measure             -- predict->measure->refit: tile-kernel grid +
+                               machine-parameter calibration fit
   bench_meshopt             -- beyond-paper: TPU mesh codesign (eq. 18)
   bench_roofline            -- SRoofline summary from dry-run artifacts
   bench_service             -- query service: cold sweep vs warm artifact
@@ -28,7 +30,8 @@ import traceback
 
 SUITE_NAMES = [
     "area", "pareto", "sweep", "sensitivity", "cache_removal",
-    "resource_allocation", "kernels", "meshopt", "roofline", "service",
+    "resource_allocation", "kernels", "measure", "meshopt", "roofline",
+    "service",
 ]
 
 
@@ -64,6 +67,7 @@ def main() -> None:
         bench_area,
         bench_cache_removal,
         bench_kernels,
+        bench_measure,
         bench_meshopt,
         bench_pareto,
         bench_resource_allocation,
@@ -84,6 +88,7 @@ def main() -> None:
                 bench_cache_removal,
                 bench_resource_allocation,
                 bench_kernels,
+                bench_measure,
                 bench_meshopt,
                 bench_roofline,
                 bench_service,

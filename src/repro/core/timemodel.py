@@ -54,10 +54,13 @@ __all__ = [
     "STENCILS",
     "MAXWELL_GPU",
     "TITANX_GPU",
+    "GPUS_BY_NAME",
     "footprint_bytes",
     "stencil_time",
     "stencil_gflops",
     "feasible",
+    "with_machine_params",
+    "with_c_iter",
 ]
 
 
@@ -125,6 +128,40 @@ STENCILS: Dict[str, StencilSpec] = {
 
 MAXWELL_GPU = GPUSpec(name="gtx980", bw_gmem=224.0e9)
 TITANX_GPU = GPUSpec(name="titanx", bw_gmem=336.0e9)
+
+#: THE name -> datasheet-spec registry. Every layer that resolves a GPU
+#: family by name (the service CLI's --gpu knob, the calibration fit's
+#: measurement-frame lookup) consumes this one table; adding a target
+#: means adding it here (plus a stock hardware point in
+#: repro.measure.harness if it will frame measurements).
+GPUS_BY_NAME: Dict[str, GPUSpec] = {g.name: g for g in (MAXWELL_GPU, TITANX_GPU)}
+
+
+def with_machine_params(gpu: GPUSpec, bw_gmem=None, launch_overhead=None, name=None):
+    """A copy of ``gpu`` with refitted *measured* machine parameters.
+
+    This is the calibration seam (:mod:`repro.measure.calibrate`): the two
+    continuous constants the empirical fit can move -- global-memory
+    bandwidth and launch overhead -- swapped without touching the design
+    variables or family limits. Values may be JAX tracers (the fit
+    differentiates straight through :func:`stencil_time` on a spec built
+    from traced parameters, exactly like the sweep engine's traced specs).
+    """
+    updates: Dict[str, object] = {}
+    if bw_gmem is not None:
+        updates["bw_gmem"] = bw_gmem
+    if launch_overhead is not None:
+        updates["launch_overhead"] = launch_overhead
+    if name is not None:
+        updates["name"] = name
+    return dataclasses.replace(gpu, **updates)
+
+
+def with_c_iter(st: StencilSpec, c_iter):
+    """A copy of ``st`` with a refitted per-iteration compute cost (the
+    per-stencil machine parameter the paper measures in §IV.B). ``c_iter``
+    may be a JAX tracer during fitting."""
+    return dataclasses.replace(st, c_iter=c_iter)
 
 
 def _dtype_for(xp, dtype):

@@ -1,0 +1,39 @@
+"""Empirical measurement + time-model calibration (predict -> measure -> refit).
+
+The paper's argument rests on its analytical execution-time model tracking
+real stencil kernels (§IV.B measures per-stencil machine parameters, §V
+validates predicted vs. observed times on the GTX-980 / Titan X). This
+package closes that loop for the reproduction:
+
+* :mod:`repro.measure.harness`   -- runs the tile-parameterized Pallas
+  stencils (:mod:`repro.kernels.pallas_stencils`) over a (stencil, problem
+  size, tile) grid with warmup/repeat/median timing discipline and device
+  sync, emitting :class:`~repro.measure.harness.MeasurementRecord` rows;
+* :mod:`repro.measure.calibrate` -- a JAX gradient fit (log-space
+  least squares through the traceable :mod:`repro.core.timemodel`) that
+  refits the machine parameters -- per-stencil ``C_iter``, global-memory
+  bandwidth, launch overhead -- from measurements and reports per-stencil
+  predicted-vs-measured error before/after;
+* :mod:`repro.measure.cli`       -- ``python -m repro.measure.cli
+  run|fit|build``: persist measurement runs and calibrated hardware as
+  content-addressed artifacts (``kind: "measurement"`` /
+  ``"calibration"`` manifests in the :class:`repro.service.store
+  .ArtifactStore`), then build a *calibrated* sweep artifact the fleet
+  gateway routes ``/v1/query`` what-ifs against.
+
+Walkthrough with CLI examples: ``docs/calibration.md``.
+"""
+
+from .calibrate import (  # noqa: F401
+    CalibrationResult,
+    fit_machine_params,
+    predicted_times,
+    synthetic_records,
+)
+from .harness import (  # noqa: F401
+    MeasurementRecord,
+    MeasurementRun,
+    default_grid,
+    measure_grid,
+    measure_one,
+)

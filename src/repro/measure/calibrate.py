@@ -1,0 +1,405 @@
+"""Refit the time model's machine parameters from measurements.
+
+The analytical model (:mod:`repro.core.timemodel`) separates *design
+variables* (n_SM, n_V, M_SM, tile sizes) from *machine parameters* the
+paper measures per target (§IV.B): per-stencil per-iteration compute cost
+``C_iter``, global-memory bandwidth, and launch overhead. This module fits
+those machine parameters to a :class:`~repro.measure.harness
+.MeasurementRun` by nonlinear least squares **in log space**::
+
+    theta = log([C_iter(st_1) ... C_iter(st_n), bw_gmem, launch_overhead])
+    loss(theta) = mean_r (log T_model(r; theta) - log T_measured(r))^2
+
+The model is evaluated with ``xp=jax.numpy`` on specs carrying traced
+parameters (:func:`repro.core.timemodel.with_c_iter` /
+:func:`~repro.core.timemodel.with_machine_params`), so ``jax.grad``
+differentiates straight through every floor/ceil term: the non-smoothness
+lives entirely in factors that do not depend on ``theta``, which makes the
+log-residual surface piecewise-smooth in the fitted parameters. The whole
+descent (Adam, fixed iteration budget) runs as one jitted
+``lax.fori_loop``.
+
+Feasibility (eqs. 9-15) does not depend on ``theta`` either, so records
+the model rejects at the nominal hardware point are dropped up front (and
+counted in the result) instead of poisoning the loss with infinities.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.timemodel import (
+    MAXWELL_GPU,
+    STENCILS,
+    GPUSpec,
+    ProblemSize,
+    StencilSpec,
+    stencil_time,
+    with_c_iter,
+    with_machine_params,
+)
+from repro.core.workload import Workload, WorkloadCell, paper_sizes
+from repro.kernels.pallas_stencils import TILE_NAMES
+
+from .harness import MeasurementRecord, MeasurementRun, feasible_tiles
+
+__all__ = [
+    "RECOVERY_RTOL",
+    "CalibrationResult",
+    "predicted_times",
+    "fit_machine_params",
+    "synthetic_records",
+]
+
+#: the synthetic-recovery acceptance property, in ONE place: fitting
+#: model-generated timings from perturbed starting parameters must land
+#: every parameter within this relative error of the generating machine.
+#: Both the CI smoke lane (scripts/measure_smoke.py) and the benchmark
+#: suite (benchmarks/bench_measure.py) assert against this constant.
+RECOVERY_RTOL = 0.05
+
+
+def _group_arrays(
+    records: Sequence[MeasurementRecord],
+) -> Dict[str, Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]]:
+    """stencil -> (hw (P,3), sizes (P,4) as (s1,s2,s3,t), tiles (P,5),
+    measured times (P,)), in first-appearance order."""
+    groups: Dict[str, List[MeasurementRecord]] = {}
+    for r in records:
+        groups.setdefault(r.stencil, []).append(r)
+    out = {}
+    for name, rs in groups.items():
+        out[name] = (
+            np.array([r.hw for r in rs], np.float64),
+            np.array([r.size for r in rs], np.float64),
+            np.array([r.tiles for r in rs], np.float64),
+            np.array([r.time_s for r in rs], np.float64),
+        )
+    return out
+
+
+def _model_times(
+    st: StencilSpec,
+    gpu: GPUSpec,
+    hw: np.ndarray,
+    sizes: np.ndarray,
+    tiles: np.ndarray,
+    xp=np,
+    dtype=None,
+):
+    """Vectorized T_alg for (P,) records of one stencil; spec fields (and
+    therefore the machine parameters) may be tracers."""
+    size = ProblemSize(s1=sizes[:, 0], s2=sizes[:, 1], t=sizes[:, 3], s3=sizes[:, 2])
+    return stencil_time(
+        st, gpu, size, hw[:, 0], hw[:, 1], hw[:, 2],
+        tiles[:, 0], tiles[:, 1], tiles[:, 2], tiles[:, 3], tiles[:, 4],
+        xp=xp, dtype=dtype,
+    )
+
+
+def predicted_times(
+    records: Sequence[MeasurementRecord],
+    gpu: GPUSpec,
+    stencils: Optional[Mapping[str, StencilSpec]] = None,
+) -> np.ndarray:
+    """Model predictions (float64 NumPy path) for each record, in order;
+    infeasible configurations get ``+inf``."""
+    stencils = dict(STENCILS if stencils is None else stencils)
+    out = np.empty(len(records), np.float64)
+    index: Dict[str, List[int]] = {}
+    for i, r in enumerate(records):
+        index.setdefault(r.stencil, []).append(i)
+    for name, (hw, sizes, tiles, _) in _group_arrays(records).items():
+        out[index[name]] = _model_times(stencils[name], gpu, hw, sizes, tiles)
+    return out
+
+
+@dataclasses.dataclass
+class CalibrationResult:
+    """Fitted machine parameters plus the before/after error report."""
+
+    gpu0: GPUSpec  # datasheet constants the fit started from
+    gpu: GPUSpec  # refitted (bw_gmem, launch_overhead)
+    stencils: Dict[str, StencilSpec]  # refitted c_iter per measured stencil
+    errors_before: Dict[str, float]  # per-stencil mean |rel err|, datasheet
+    errors_after: Dict[str, float]  # ... refitted
+    loss_before: float  # mean squared log residual
+    loss_after: float
+    n_records: int
+    n_dropped: int  # model-infeasible records excluded from the fit
+    iters: int
+    learning_rate: float
+
+    def param_rel_error(self, target_gpu: GPUSpec,
+                        target_stencils: Mapping[str, StencilSpec]) -> float:
+        """Max relative error of the fitted parameters vs a known-truth
+        model -- the synthetic-recovery acceptance metric."""
+        errs = [
+            abs(self.gpu.bw_gmem - target_gpu.bw_gmem) / target_gpu.bw_gmem,
+            abs(self.gpu.launch_overhead - target_gpu.launch_overhead)
+            / target_gpu.launch_overhead,
+        ]
+        for name, st in self.stencils.items():
+            truth = target_stencils[name].c_iter
+            errs.append(abs(st.c_iter - truth) / truth)
+        return float(max(errs))
+
+    def calibrated_gpu(self, name: Optional[str] = None) -> GPUSpec:
+        """The refitted GPUSpec under a distinguishable name (a calibrated
+        artifact must never alias the datasheet target in routing)."""
+        return with_machine_params(
+            self.gpu, name=name or f"{self.gpu0.name}-cal"
+        )
+
+    def calibrated_workload(
+        self,
+        stencil_names: Optional[Sequence[str]] = None,
+        name: str = "paper-uniform-cal",
+    ) -> Workload:
+        """The paper's uniform workload rebuilt on the refitted stencil
+        specs -- what a calibrated sweep artifact is solved over."""
+        names = list(stencil_names or self.stencils)
+        missing = [n for n in names if n not in self.stencils]
+        if missing:
+            raise KeyError(f"stencil(s) {missing} were not calibrated")
+        cells: List[WorkloadCell] = []
+        for n in names:
+            st = self.stencils[n]
+            sizes = paper_sizes(st.dims)
+            for sz in sizes:
+                cells.append(WorkloadCell(st, sz, 1.0 / (len(names) * len(sizes))))
+        return Workload(name=name, cells=tuple(cells))
+
+    # ---- plain-JSON persistence (artifact-store manifest body) -----------
+    def to_payload(self) -> dict:
+        return {
+            "gpu0": dataclasses.asdict(self.gpu0),
+            "gpu": dataclasses.asdict(self.gpu),
+            "stencils": {
+                n: dataclasses.asdict(st) for n, st in sorted(self.stencils.items())
+            },
+            "errors_before": {k: float(v) for k, v in sorted(self.errors_before.items())},
+            "errors_after": {k: float(v) for k, v in sorted(self.errors_after.items())},
+            "loss_before": float(self.loss_before),
+            "loss_after": float(self.loss_after),
+            "n_records": int(self.n_records),
+            "n_dropped": int(self.n_dropped),
+            "iters": int(self.iters),
+            "learning_rate": float(self.learning_rate),
+        }
+
+    @classmethod
+    def from_payload(cls, obj: Mapping) -> "CalibrationResult":
+        return cls(
+            gpu0=GPUSpec(**obj["gpu0"]),
+            gpu=GPUSpec(**obj["gpu"]),
+            stencils={n: StencilSpec(**d) for n, d in obj["stencils"].items()},
+            errors_before=dict(obj["errors_before"]),
+            errors_after=dict(obj["errors_after"]),
+            loss_before=float(obj["loss_before"]),
+            loss_after=float(obj["loss_after"]),
+            n_records=int(obj["n_records"]),
+            n_dropped=int(obj["n_dropped"]),
+            iters=int(obj["iters"]),
+            learning_rate=float(obj["learning_rate"]),
+        )
+
+
+def _rel_errors(
+    records: Sequence[MeasurementRecord],
+    gpu: GPUSpec,
+    stencils: Mapping[str, StencilSpec],
+) -> Dict[str, float]:
+    pred = predicted_times(records, gpu, stencils)
+    per: Dict[str, List[float]] = {}
+    for r, p in zip(records, pred):
+        if np.isfinite(p):
+            per.setdefault(r.stencil, []).append(abs(p - r.time_s) / r.time_s)
+    return {k: float(np.mean(v)) for k, v in sorted(per.items())}
+
+
+def fit_machine_params(
+    run: MeasurementRun | Sequence[MeasurementRecord],
+    gpu0: Optional[GPUSpec] = None,
+    stencils0: Optional[Mapping[str, StencilSpec]] = None,
+    iters: int = 1500,
+    learning_rate: float = 0.05,
+) -> CalibrationResult:
+    """Fit (per-stencil C_iter, bw_gmem, launch_overhead) to measurements.
+
+    Adam in log-parameter space (positivity for free, scale-invariant
+    steps across parameters nine orders of magnitude apart), fixed
+    ``iters`` budget, the whole descent one compiled ``lax.fori_loop``.
+    """
+    if isinstance(run, MeasurementRun):
+        records = list(run.records)
+        if gpu0 is None:
+            from repro.core.timemodel import GPUS_BY_NAME
+
+            gpu0 = GPUS_BY_NAME.get(run.gpu_name)
+            if gpu0 is None:
+                # a silent gtx980 fallback would frame the fit on the
+                # wrong family AND name/route the calibration as
+                # gtx980-cal -- cross-family confusion must be explicit
+                raise ValueError(
+                    f"measurement run is framed against unknown GPU "
+                    f"{run.gpu_name!r}; pass gpu0= explicitly "
+                    f"(known families: {sorted(GPUS_BY_NAME)})"
+                )
+    else:
+        records = list(run)
+    gpu0 = gpu0 or MAXWELL_GPU
+    stencils0 = dict(STENCILS if stencils0 is None else stencils0)
+    if not records:
+        raise ValueError("no measurement records to fit")
+
+    # drop model-infeasible records (theta-independent mask) up front
+    pred0 = predicted_times(records, gpu0, stencils0)
+    keep = np.isfinite(pred0)
+    n_dropped = int((~keep).sum())
+    records = [r for r, k in zip(records, keep) if k]
+    if not records:
+        raise ValueError("every record is infeasible under the analytical model")
+
+    groups = _group_arrays(records)
+    names = list(groups)  # first-appearance order; theta layout
+    dev_groups = {
+        n: tuple(jnp.asarray(a, jnp.float32) for a in arrs)
+        for n, arrs in groups.items()
+    }
+    theta0 = jnp.log(
+        jnp.asarray(
+            [stencils0[n].c_iter for n in names]
+            + [gpu0.bw_gmem, gpu0.launch_overhead],
+            jnp.float32,
+        )
+    )
+
+    def loss_fn(theta):
+        total, count = 0.0, 0
+        for gi, n in enumerate(names):
+            hw, sizes, tiles, t_meas = dev_groups[n]
+            st = with_c_iter(stencils0[n], jnp.exp(theta[gi]))
+            gpu = with_machine_params(
+                gpu0, bw_gmem=jnp.exp(theta[-2]), launch_overhead=jnp.exp(theta[-1])
+            )
+            pred = _model_times(st, gpu, hw, sizes, tiles, xp=jnp, dtype=jnp.float32)
+            r = jnp.log(pred) - jnp.log(t_meas)
+            total = total + jnp.sum(r * r)
+            count += t_meas.shape[0]
+        return total / count
+
+    grad_fn = jax.value_and_grad(loss_fn)
+
+    @jax.jit
+    def descend(theta):
+        m0 = jnp.zeros_like(theta)
+        v0 = jnp.zeros_like(theta)
+        b1, b2, eps = 0.9, 0.999, 1e-8
+
+        def step(i, carry):
+            theta, m, v = carry
+            _, g = grad_fn(theta)
+            m = b1 * m + (1.0 - b1) * g
+            v = b2 * v + (1.0 - b2) * g * g
+            t = i + 1.0
+            mhat = m / (1.0 - b1**t)
+            vhat = v / (1.0 - b2**t)
+            theta = theta - learning_rate * mhat / (jnp.sqrt(vhat) + eps)
+            return theta, m, v
+
+        theta, _, _ = lax.fori_loop(0.0, float(iters), step, (theta, m0, v0))
+        return theta
+
+    theta = np.asarray(descend(theta0), np.float64)
+    fitted = np.exp(theta)
+    stencils = {
+        n: with_c_iter(stencils0[n], float(fitted[i])) for i, n in enumerate(names)
+    }
+    gpu = with_machine_params(
+        gpu0, bw_gmem=float(fitted[-2]), launch_overhead=float(fitted[-1])
+    )
+
+    def _sq_log_loss(g, sts):
+        pred = predicted_times(records, g, sts)
+        r = np.log(pred) - np.log([rec.time_s for rec in records])
+        return float(np.mean(r * r))
+
+    return CalibrationResult(
+        gpu0=gpu0,
+        gpu=gpu,
+        stencils=stencils,
+        errors_before=_rel_errors(records, gpu0, stencils0),
+        errors_after=_rel_errors(records, gpu, stencils),
+        loss_before=_sq_log_loss(gpu0, stencils0),
+        loss_after=_sq_log_loss(gpu, stencils),
+        n_records=len(records),
+        n_dropped=n_dropped,
+        iters=int(iters),
+        learning_rate=float(learning_rate),
+    )
+
+
+def synthetic_records(
+    gpu: GPUSpec,
+    stencils: Optional[Mapping[str, StencilSpec]] = None,
+    noise: float = 0.0,
+    seed: int = 0,
+    hw_points: Optional[Sequence[Tuple[float, float, float]]] = None,
+) -> List[MeasurementRecord]:
+    """Model-generated "measurements" (the CI calibration check's input:
+    fitting these from perturbed starting parameters must recover the
+    generating model). Varies hardware point, problem size, and tile so
+    every fitted parameter is identifiable; ``noise`` is multiplicative
+    log-normal sigma."""
+    stencils = dict(STENCILS if stencils is None else stencils)
+    if hw_points is None:
+        # the (2, 32) point matters: with few SMs the memory term
+        # (concurrent * footprint / bw) stays small, so every stencil gets
+        # compute-bound records and C_iter's gradient never plateaus under
+        # the max(t_compute, t_mem) kink (memory-bound-only grids leave
+        # C_iter unidentifiable).
+        hw_points = [(16.0, 128.0, 96.0), (8.0, 64.0, 48.0), (2.0, 32.0, 96.0)]
+    tile_cands = [
+        {"t_s1": 8, "t_s2": 32, "t_t": 2, "k": 1},
+        {"t_s1": 16, "t_s2": 64, "t_t": 4, "k": 2},
+        {"t_s1": 32, "t_s2": 128, "t_t": 8, "k": 1},
+    ]
+    sizes_2d = [(512, 512, 1, 8), (2048, 2048, 1, 64), (128, 128, 1, 2)]
+    sizes_3d = [(64, 64, 64, 8), (128, 128, 128, 16), (32, 32, 32, 2)]
+    rng = np.random.default_rng(seed)
+    candidates: List[MeasurementRecord] = []
+    for name, st in stencils.items():
+        sizes = sizes_3d if st.dims == 3 else sizes_2d
+        for hw in hw_points:
+            hw_map = dict(zip(("n_sm", "n_v", "m_sm"), hw))
+            for tiles in feasible_tiles(name, tile_cands, gpu, hw_map):
+                for size in sizes:
+                    candidates.append(
+                        MeasurementRecord(
+                            stencil=name,
+                            size=size,
+                            tiles=tuple(int(tiles[k]) for k in TILE_NAMES),
+                            time_s=1.0,  # placeholder, replaced below
+                            hw=hw,
+                        )
+                    )
+    # one vectorized model pass over the whole grid (per-stencil groups)
+    times = predicted_times(candidates, gpu, stencils)
+    if noise > 0:
+        times = times * np.exp(rng.normal(0.0, noise, size=times.shape))
+    out = [
+        dataclasses.replace(rec, time_s=float(t))
+        for rec, t in zip(candidates, times)
+        if np.isfinite(t)
+    ]
+    if not out:
+        raise RuntimeError("synthetic grid produced no feasible records")
+    return out

@@ -30,9 +30,16 @@ from .gateway import (  # noqa: F401
     GatewayError,
     GatewayHTTPServer,
     UnknownArtifactError,
+    WrongArtifactKindError,
     serve_http,
 )
 from .query import QueryEngine, QueryRequest, QueryResponse  # noqa: F401
 from .server import CodesignServer  # noqa: F401
-from .store import Artifact, ArtifactStore, artifact_spec, spec_key  # noqa: F401
+from .store import (  # noqa: F401
+    KINDS,
+    Artifact,
+    ArtifactStore,
+    artifact_spec,
+    spec_key,
+)
 from .wire import RemoteError, WireError  # noqa: F401

@@ -40,15 +40,28 @@ DEFAULT_STORE = os.environ.get(
     "REPRO_STORE", os.path.join(os.path.expanduser("~"), ".cache", "repro", "codesign-store")
 )
 
-#: GPU targets an artifact can be built for / routed by (paper §IV.B uses
-#: the GTX-980 Maxwell constants; Titan X is the §V validation part).
-GPUS = {"gtx980": None, "titanx": None}  # resolved lazily (jax-free import)
+def _gpu_names():
+    """Buildable GPU targets (paper §IV.B GTX-980 + §V Titan X) -- read
+    from THE registry (`timemodel.GPUS_BY_NAME`, a numpy-only import) so
+    the CLI knobs can never drift from the families the model knows."""
+    from repro.core.timemodel import GPUS_BY_NAME
+
+    return sorted(GPUS_BY_NAME)
 
 
 def _gpu(name: str):
-    from repro.core.timemodel import MAXWELL_GPU, TITANX_GPU
+    from repro.core.timemodel import GPUS_BY_NAME
 
-    return {"gtx980": MAXWELL_GPU, "titanx": TITANX_GPU}[name]
+    try:
+        return GPUS_BY_NAME[name]
+    except KeyError:
+        # reached only on in-process paths: with --url the name is a
+        # routing selector and never resolves to constants here
+        raise _die(
+            f"unknown GPU target {name!r} (in-process builds support "
+            f"{_gpu_names()}; calibrated names like 'gtx980-cal' route "
+            "only through a gateway, via --url)"
+        ) from None
 
 
 def _die(message: str) -> "SystemExit":
@@ -60,9 +73,11 @@ def _die(message: str) -> "SystemExit":
 
 def _add_server_args(p: argparse.ArgumentParser) -> None:
     p.add_argument("--store", default=DEFAULT_STORE, help="artifact store directory")
-    p.add_argument("--gpu", choices=sorted(GPUS), default=None,
-                   help="GPU target constants (default gtx980); with --url, "
-                        "the routing selector instead")
+    p.add_argument("--gpu", default=None,
+                   help=f"GPU target constants, one of {_gpu_names()} "
+                        "(default gtx980); with --url, the routing selector "
+                        "instead -- any served name, incl. calibrated ones "
+                        "like 'gtx980-cal'")
     p.add_argument("--max-hw-area", type=float, default=650.0,
                    help="hardware-space enumeration budget (mm^2)")
     p.add_argument("--downsample", type=int, default=1,
@@ -131,7 +146,87 @@ def _print_response(resp, out, total_hw=None) -> None:
         print(f"what-if delta vs unrestricted best: {w['delta_gflops']:+.1f} GFLOP/s")
 
 
+def _load_batch_file(path: str):
+    """A --batch-file is a JSON array of ``{"artifact"?, "route"?,
+    "request"}`` objects (the /v1/query_many elements, verbatim)."""
+    try:
+        with open(path) as f:
+            items = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        raise _die(f"cannot read batch file {path!r}: {e}")
+    if not isinstance(items, list) or not items:
+        raise _die(f"batch file {path!r} must hold a non-empty JSON array")
+    triples = []
+    for i, obj in enumerate(items):
+        if not isinstance(obj, dict) or "request" not in obj:
+            raise _die(f"batch file entry {i} must be an object with a 'request'")
+        try:
+            triples.append(
+                (QueryRequest(**obj["request"]), obj.get("artifact"), obj.get("route"))
+            )
+        except TypeError as e:
+            raise _die(f"batch file entry {i}: {e}")
+    return triples
+
+
+def cmd_query_batch(args) -> None:
+    """One /v1/query_many round trip; per-query results (answers or
+    structured errors) print as a JSON array in input order."""
+    from .client import GatewayClient
+
+    if not args.url:
+        raise _die("--batch-file requires --url (the batched endpoint is "
+                   "a gateway feature)")
+    # the batch file is the whole question: silently ignoring query-shaping
+    # flags would run different constraints than the user typed
+    superseded = {
+        "--stencil": args.stencil, "--freq": args.freq, "--fix": args.fix,
+        "--artifact": args.artifact, "--gpu": args.gpu,
+        "--pareto": args.pareto or None,
+        "--max-area": None if args.max_area == np.inf else args.max_area,
+        "--min-area": args.min_area or None,
+        "--top-k": None if args.top_k == 1 else args.top_k,
+    }
+    clashing = sorted(flag for flag, v in superseded.items() if v)
+    if clashing:
+        raise _die(
+            f"{', '.join(clashing)} cannot be combined with --batch-file; "
+            "put the constraints in each batch entry's 'request' instead"
+        )
+    triples = _load_batch_file(args.batch_file)
+    client = GatewayClient(args.url)
+    t0 = time.perf_counter()
+    try:
+        results = client.query_many(triples)
+    except RemoteError as e:
+        raise _die(f"gateway refused the batch: {e}")
+    except urllib.error.URLError as e:
+        raise _die(f"cannot reach gateway at {args.url}: {e.reason}")
+    dt = time.perf_counter() - t0
+    out = []
+    for r in results:
+        if isinstance(r, RemoteError):
+            out.append({"ok": False,
+                        "error": {"code": r.code, "message": r.message}})
+        else:
+            feasible = r.best_index >= 0
+            out.append({
+                "ok": True,
+                "artifact_key": r.artifact_key,
+                "feasible": feasible,
+                "best": {**r.best_point, "index": r.best_index,
+                         "gflops": r.best_gflops} if feasible else None,
+                "top_k": r.top_k,
+            })
+    json.dump({"batch_s": round(dt, 4), "results": out}, sys.stdout,
+              indent=1, default=float)
+    sys.stdout.write("\n")
+
+
 def cmd_query(args) -> None:
+    if args.batch_file:
+        cmd_query_batch(args)
+        return
     req = QueryRequest(
         freqs=_freqs(args),
         max_area=args.max_area,
@@ -213,9 +308,34 @@ def cmd_ls(args) -> None:
         print(f"(no artifacts under {store.root})")
         return
     for r in rows:
+        kind = r.get("kind", "sweep")
+        if kind != "sweep":
+            print(f"{r['key']}  v{r['format_version']}  kind={kind}  "
+                  + " ".join(f"{k}={v}" for k, v in sorted(r.items())
+                             if k not in ("key", "format_version", "kind")))
+            continue
         print(f"{r['key']}  v{r['format_version']}  {r['workload']:16s} "
               f"gpu={r['gpu']:8s} {r['cells']:4d} cells x {r['hw']:6d} hw  "
               f"engine={r['engine']}  [{','.join(r['stencils'])}]")
+
+
+def cmd_upgrade(args) -> None:
+    """Backfill routing blocks / kind tags on manifests written by older
+    writers (pre-gateway). Content keys never move (the key hashes the
+    question spec, not the manifest bytes)."""
+    roots = [args.store] + (args.root or [])
+    total = stored = 0
+    for root in roots:
+        try:
+            store = ArtifactStore(root, create=False)
+        except FileNotFoundError as e:
+            raise _die(str(e))
+        upgraded = store.upgrade_manifests()
+        total += len(upgraded)
+        stored += len(store.keys())
+        for key in upgraded:
+            print(f"upgraded {key}  ({root})")
+    print(f"{total} manifest(s) upgraded, {stored} total")
 
 
 def cmd_serve(args) -> None:
@@ -249,6 +369,10 @@ def cmd_serve(args) -> None:
     host, port = httpd.server_address[:2]
     print(f"gateway: {len(gw)} artifact(s) from {len(roots)} store root(s)")
     for row in gw.entries():
+        if row.get("kind", "sweep") != "sweep":
+            print(f"  {row['key']}  kind={row['kind']}  "
+                  f"gpu={row.get('gpu', '?')}")
+            continue
         print(f"  {row['key']}  gpu={row['gpu']}  {row['cells']}x{row['hw']}  "
               f"[{','.join(row['stencils'])}]")
     # machine-parseable last line: the smoke lane reads the bound port here
@@ -275,6 +399,9 @@ def main(argv=None) -> None:
                         "in-process (e.g. http://127.0.0.1:8932)")
     q.add_argument("--artifact", default=None, metavar="KEY",
                    help="with --url: pin the artifact content key to query")
+    q.add_argument("--batch-file", default=None, metavar="FILE",
+                   help="with --url: JSON array of {artifact?, route?, request} "
+                        "objects sent as ONE /v1/query_many round trip")
     q.add_argument("--stencil", action="append",
                    help="stencil to weight 1.0 (repeatable)")
     q.add_argument("--freq", action="append", metavar="NAME=W",
@@ -296,6 +423,16 @@ def main(argv=None) -> None:
     ls = sub.add_parser("ls", help="list stored artifacts")
     ls.add_argument("--store", default=DEFAULT_STORE)
     ls.set_defaults(fn=cmd_ls)
+
+    up = sub.add_parser(
+        "upgrade",
+        help="backfill routing/kind on manifests from older writers "
+             "(content keys unchanged)",
+    )
+    up.add_argument("--store", default=DEFAULT_STORE)
+    up.add_argument("--root", action="append", metavar="DIR",
+                    help="additional store root (repeatable)")
+    up.set_defaults(fn=cmd_upgrade)
 
     s = sub.add_parser(
         "serve", help="HTTP gateway over every stored artifact (docs/serving.md)"

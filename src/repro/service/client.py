@@ -1,4 +1,4 @@
-"""Thin HTTP client for a codesign gateway (stdlib ``urllib`` only).
+"""Thin HTTP client for a codesign gateway (stdlib only).
 
 The client is a pure transport shim: it encodes with
 :mod:`repro.service.wire`, POSTs, and decodes -- so a
@@ -12,19 +12,35 @@ object (field for field, and on the wire byte for byte) the in-process
     c.artifacts()                                   # routing index rows
     c.query(QueryRequest(freqs={"heat2d": 1.0}),    # routed by selector
             route={"gpu": "titanx"})
+    c.query_many([(QueryRequest(freqs={"heat2d": 1.0}), None, {"gpu": "titanx"}),
+                  (QueryRequest(freqs={"jacobi2d": 1.0}), None, {"gpu": "gtx980"})])
+
+Transport: one persistent ``http.client.HTTPConnection`` per client,
+reused across requests (the gateway speaks HTTP/1.1 keep-alive). The
+previous ``urllib`` implementation opened a fresh TCP connection per
+request -- connection setup was most of the measured ~7-10x wire tax
+(ROADMAP; before/after QPS lands in ``BENCH_sweep.json`` via
+``benchmarks/bench_service.py``). A request that fails on a *reused*
+connection (the server closed its keep-alive side) is retried once on a
+fresh connection; a fresh-connection failure propagates. ``keepalive=
+False`` restores the connection-per-request behavior for A/B measurement.
 
 Structured gateway failures raise :class:`repro.service.wire.RemoteError`
 with the server's error ``code`` (``unknown_artifact``, ``bad_request``,
 ``ambiguous_route``, ``internal``); transport-level failures surface as
-the usual ``urllib.error.URLError``.
+``urllib.error.URLError`` (the exception type callers already handle).
+The client is thread-compatible (an internal lock serializes requests);
+use one client per thread for parallelism.
 """
 
 from __future__ import annotations
 
+import http.client
 import json
+import threading
 import urllib.error
-import urllib.request
-from typing import Any, Dict, List, Mapping, Optional
+from typing import Any, Dict, List, Mapping, Optional, Sequence, Tuple, Union
+from urllib.parse import urlsplit
 
 from . import wire
 from .query import QueryRequest, QueryResponse
@@ -35,29 +51,90 @@ __all__ = ["GatewayClient"]
 class GatewayClient:
     """Client for one gateway base URL (e.g. ``http://host:port``)."""
 
-    def __init__(self, base_url: str, timeout: float = 30.0):
+    def __init__(self, base_url: str, timeout: float = 30.0, keepalive: bool = True):
+        parts = urlsplit(base_url if "//" in base_url else f"http://{base_url}")
+        if parts.scheme not in ("http", "https"):
+            raise ValueError(f"unsupported URL scheme {parts.scheme!r} in {base_url!r}")
+        if not parts.hostname:
+            raise ValueError(f"no host in gateway URL {base_url!r}")
         self.base_url = base_url.rstrip("/")
         self.timeout = float(timeout)
+        self.keepalive = bool(keepalive)
+        self._host = parts.hostname
+        self._port = parts.port  # None -> scheme default
+        self._path_prefix = parts.path.rstrip("/")
+        self._conn_cls = (
+            http.client.HTTPSConnection if parts.scheme == "https"
+            else http.client.HTTPConnection
+        )
+        self._conn: Optional[http.client.HTTPConnection] = None
+        self._mu = threading.Lock()
         self._last_status = 0  # HTTP status of the most recent call
 
     # ---- transport --------------------------------------------------------
+    def _drop(self) -> None:
+        if self._conn is not None:
+            try:
+                self._conn.close()
+            except OSError:
+                pass
+            self._conn = None
+
+    def close(self) -> None:
+        """Drop the persistent connection (idempotent)."""
+        with self._mu:
+            self._drop()
+
+    def __enter__(self) -> "GatewayClient":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def _request(self, path: str, body: Optional[bytes] = None) -> Tuple[bytes, int]:
+        """One request; returns ``(raw body, HTTP status)``. HTTP error
+        statuses still carry wire payloads -- the body is returned (not
+        raised) so the decoder can surface the server's structured code.
+        The status is *returned* rather than read back from shared state:
+        two threads sharing a client must never pair one request's body
+        with the other's status."""
+        method = "POST" if body is not None else "GET"
+        headers = {"Content-Type": "application/json"}
+        with self._mu:
+            for attempt in (0, 1):
+                reused = self._conn is not None
+                conn = self._conn or self._conn_cls(
+                    self._host, self._port, timeout=self.timeout
+                )
+                self._conn = None
+                try:
+                    conn.request(method, self._path_prefix + path, body, headers)
+                    resp = conn.getresponse()
+                    data = resp.read()
+                    self._last_status = resp.status
+                except (http.client.HTTPException, OSError) as e:
+                    try:
+                        conn.close()
+                    except OSError:
+                        pass
+                    # retry covers ONLY a stale keep-alive socket (server
+                    # closed its side: reset/EOF before a response). A
+                    # timeout is not staleness -- re-sending would double
+                    # both the effective timeout and the server's work.
+                    if reused and attempt == 0 and not isinstance(e, TimeoutError):
+                        continue
+                    raise urllib.error.URLError(e) from e
+                if self.keepalive and not resp.will_close:
+                    self._conn = conn
+                else:
+                    conn.close()
+                return data, resp.status
+        raise AssertionError("unreachable")  # pragma: no cover
+
     def _http(self, path: str, body: Optional[bytes] = None) -> bytes:
-        """One request; returns the raw body. HTTP error statuses still
-        carry wire payloads -- the body is returned (not raised) so the
-        decoder can surface the server's structured code."""
-        req = urllib.request.Request(
-            self.base_url + path,
-            data=body,
-            method="POST" if body is not None else "GET",
-            headers={"Content-Type": "application/json"},
-        )
-        try:
-            with urllib.request.urlopen(req, timeout=self.timeout) as resp:
-                self._last_status = resp.status
-                return resp.read()
-        except urllib.error.HTTPError as e:
-            self._last_status = e.code
-            return e.read()
+        """Body-only transport entry point (kept for callers that pair it
+        with :attr:`_last_status` single-threadedly, e.g. smoke scripts)."""
+        return self._request(path, body)[0]
 
     def query_bytes(
         self,
@@ -71,6 +148,15 @@ class GatewayClient:
             "/v1/query", wire.encode_request(request, artifact=artifact, route=route)
         )
 
+    def query_many_bytes(
+        self,
+        queries: Sequence[
+            Tuple[QueryRequest, Optional[str], Optional[Mapping[str, Any]]]
+        ],
+    ) -> bytes:
+        """Raw ``/v1/query_many`` body (byte-identity entry point)."""
+        return self._http("/v1/query_many", wire.encode_request_many(queries))
+
     # ---- API --------------------------------------------------------------
     def query(
         self,
@@ -80,15 +166,65 @@ class GatewayClient:
     ) -> QueryResponse:
         """Answer one request over HTTP; raises
         :class:`~repro.service.wire.RemoteError` on structured failures."""
-        body = self.query_bytes(request, artifact=artifact, route=route)
-        return wire.decode_response(body, http_status=self._last_status)
+        body, status = self._request(
+            "/v1/query", wire.encode_request(request, artifact=artifact, route=route)
+        )
+        return wire.decode_response(body, http_status=status)
+
+    def query_many(
+        self,
+        queries: Sequence[
+            Union[
+                QueryRequest,
+                Tuple[QueryRequest, Optional[str], Optional[Mapping[str, Any]]],
+            ]
+        ],
+        artifact: Optional[str] = None,
+        route: Optional[Mapping[str, Any]] = None,
+    ) -> List[Union[QueryResponse, wire.RemoteError]]:
+        """Answer N queries in one HTTP round trip (``POST
+        /v1/query_many``). Each element is a bare :class:`QueryRequest`
+        (routed by the shared ``artifact``/``route`` arguments) or an
+        explicit ``(request, artifact, route)`` triple. Per-query failures
+        come back as :class:`~repro.service.wire.RemoteError` *values* in
+        the result list -- only envelope-level failures raise. Batches
+        larger than the wire cap (:data:`wire.MAX_BATCH`) are split
+        transparently into consecutive round trips, results concatenated
+        in input order; an envelope-level failure of a *later* chunk is
+        reported as that chunk's per-query errors rather than raised, so
+        earlier chunks' completed answers are never discarded (only a
+        first-chunk envelope failure raises, matching the single-request
+        contract)."""
+        triples = [
+            q if isinstance(q, tuple) else (q, artifact, route) for q in queries
+        ]
+        out: List[Union[QueryResponse, wire.RemoteError]] = []
+        for lo in range(0, len(triples), wire.MAX_BATCH):
+            chunk = triples[lo : lo + wire.MAX_BATCH]
+            try:
+                body, status = self._request(
+                    "/v1/query_many", wire.encode_request_many(chunk)
+                )
+                out.extend(wire.decode_response_many(body, http_status=status))
+            except wire.RemoteError as e:
+                if lo == 0:
+                    raise
+                out.extend([e] * len(chunk))
+            except (wire.WireError, urllib.error.URLError) as e:
+                # transport died / undecodable envelope mid-way: the same
+                # rule -- answered chunks are never discarded
+                if lo == 0:
+                    raise
+                err = wire.RemoteError("transport_error", str(e), 0)
+                out.extend([err] * len(chunk))
+        return out
 
     def _json(self, path: str, body: Optional[bytes] = None) -> Dict[str, Any]:
         """GET/POST a JSON endpoint; a non-2xx answer raises the server's
         structured error as :class:`RemoteError` instead of a KeyError on
         the missing success fields."""
-        raw = self._http(path, body)
-        if not 200 <= self._last_status < 300:
+        raw, status = self._request(path, body)
+        if not 200 <= status < 300:
             try:
                 err = json.loads(raw).get("error") or {}
             except ValueError:
@@ -96,7 +232,7 @@ class GatewayClient:
             raise wire.RemoteError(
                 str(err.get("code", "unknown")),
                 str(err.get("message", raw[:200].decode("utf-8", "replace"))),
-                self._last_status,
+                status,
             )
         return json.loads(raw)
 

@@ -44,7 +44,7 @@ import os
 import threading
 from collections import OrderedDict
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
-from typing import Any, Dict, List, Mapping, Optional, Sequence, Union
+from typing import Any, Dict, List, Mapping, Optional, Sequence, Tuple, Union
 
 from . import wire
 from .query import QueryRequest, QueryResponse
@@ -56,29 +56,38 @@ __all__ = [
     "GatewayError",
     "UnknownArtifactError",
     "AmbiguousRouteError",
+    "WrongArtifactKindError",
     "GatewayHTTPServer",
     "serve_http",
 ]
 
 #: selector names :meth:`Gateway.resolve` understands. ``stencils`` is a
 #: subset match (the artifact must serve at least those stencils); the
-#: rest are exact equality against the routing row.
-ROUTE_SELECTORS = ("key", "gpu", "workload", "stencils", "engine", "hw_digest")
+#: rest are exact equality against the routing row. ``kind`` widens the
+#: search beyond sweep artifacts (measurement/calibration manifests);
+#: ``calibration`` selects the sweep built from a given calibration key.
+ROUTE_SELECTORS = (
+    "key", "gpu", "workload", "stencils", "engine", "hw_digest", "kind",
+    "calibration",
+)
 
 
 class GatewayError(Exception):
     """Base of the gateway's structured failures; every subclass pins the
-    wire error ``code`` and the HTTP status it maps to."""
+    wire error ``code``, and the HTTP status comes from the shared
+    :data:`wire.ERROR_HTTP_STATUS` registry (one table serves the server
+    side here and the batched client-side decoder, so the two can never
+    disagree about how a code classifies)."""
 
     code = "internal"
-    http_status = 500
+    http_status = wire.ERROR_HTTP_STATUS["internal"]
 
 
 class UnknownArtifactError(GatewayError):
     """No stored artifact matches the requested key/selector (HTTP 404)."""
 
     code = "unknown_artifact"
-    http_status = 404
+    http_status = wire.ERROR_HTTP_STATUS["unknown_artifact"]
 
 
 class AmbiguousRouteError(GatewayError):
@@ -86,7 +95,16 @@ class AmbiguousRouteError(GatewayError):
     carries the candidate keys so the caller can pin one (HTTP 409)."""
 
     code = "ambiguous_route"
-    http_status = 409
+    http_status = wire.ERROR_HTTP_STATUS["ambiguous_route"]
+
+
+class WrongArtifactKindError(GatewayError):
+    """The resolved artifact exists but is not a queryable sweep (e.g. a
+    measurement run or calibration manifest was pinned for /v1/query).
+    The request named the wrong thing, hence HTTP 400."""
+
+    code = "wrong_artifact_kind"
+    http_status = wire.ERROR_HTTP_STATUS["wrong_artifact_kind"]
 
 
 class Gateway:
@@ -136,6 +154,7 @@ class Gateway:
             "pool_instantiations": 0,
             "pool_evictions": 0,
             "rescans": 0,
+            "batched_requests": 0,
         }
         self.refresh()
 
@@ -175,26 +194,31 @@ class Gateway:
             return len(self._index)
 
     # ---- routing ----------------------------------------------------------
-    def _match(self, route: Mapping[str, Any]) -> List[str]:
+    def _match(
+        self, route: Mapping[str, Any], kinds: Optional[Sequence[str]]
+    ) -> List[str]:
         unknown = set(route) - set(ROUTE_SELECTORS)
         if unknown:
             raise ValueError(
                 f"unknown route selector(s) {sorted(unknown)} "
                 f"(want one of {list(ROUTE_SELECTORS)})"
             )
+        if "kind" in route:
+            kinds = None  # an explicit kind selector overrides the default
         with self._mu:
             rows = list(self._index.values())
         out = []
         for row in rows:
-            ok = True
-            for name, want in route.items():
-                if name == "stencils":
-                    want_set = {want} if isinstance(want, str) else set(want)
-                    ok = want_set <= set(row["stencils"])
-                else:
-                    ok = row.get(name) == want
-                if not ok:
-                    break
+            ok = kinds is None or row.get("kind", "sweep") in kinds
+            if ok:
+                for name, want in route.items():
+                    if name == "stencils":
+                        want_set = {want} if isinstance(want, str) else set(want)
+                        ok = want_set <= set(row.get("stencils") or ())
+                    else:
+                        ok = row.get(name) == want
+                    if not ok:
+                        break
             if ok:
                 out.append(row["key"])
         return out
@@ -203,6 +227,8 @@ class Gateway:
         self,
         artifact: Optional[str] = None,
         route: Optional[Mapping[str, Any]] = None,
+        kinds: Optional[Sequence[str]] = ("sweep",),
+        rescan: bool = True,
     ) -> str:
         """Map (key | selector | nothing) -> one content key.
 
@@ -212,15 +238,37 @@ class Gateway:
         several artifacts raises :class:`AmbiguousRouteError` listing the
         candidates. With neither argument, a single-artifact gateway
         serves its only artifact and a multi-artifact one refuses to
-        guess."""
-        for attempt in range(2):
+        guess.
+
+        ``kinds`` restricts which manifest kinds compete: the query paths
+        keep the default ``("sweep",)`` so measurement/calibration
+        manifests in the same store can never make a ``{"gpu": ...}``
+        selector ambiguous (an explicit ``{"kind": ...}`` selector in
+        ``route`` overrides it). A pinned ``artifact`` key of the wrong
+        kind raises :class:`WrongArtifactKindError` rather than a
+        misleading 404.
+
+        ``rescan=False`` skips the on-demand refresh on a miss --
+        :meth:`query_many` uses it to bound a whole batch to ONE store
+        re-scan instead of one per unresolvable query."""
+        for attempt in range(2 if rescan else 1):
             if artifact is not None:
                 with self._mu:
-                    if artifact in self._index:
-                        self.stats["routed_by_key"] += 1
-                        return artifact
+                    row = self._index.get(artifact)
+                    if row is not None:
+                        kind = row.get("kind", "sweep")
+                        if kinds is not None and kind not in kinds:
+                            pass  # raise outside the lock
+                        else:
+                            self.stats["routed_by_key"] += 1
+                            return artifact
+                if row is not None:
+                    raise WrongArtifactKindError(
+                        f"artifact {artifact!r} is a {row.get('kind')!r} manifest, "
+                        f"not a queryable sweep"
+                    )
             elif route:
-                matches = self._match(route)
+                matches = self._match(route, kinds)
                 if len(matches) == 1:
                     with self._mu:
                         self.stats["routed_by_selector"] += 1
@@ -232,24 +280,34 @@ class Gateway:
                     )
             else:
                 with self._mu:
-                    if len(self._index) == 1:
+                    candidates = [
+                        k for k, row in self._index.items()
+                        if kinds is None or row.get("kind", "sweep") in kinds
+                    ]
+                if len(candidates) == 1:
+                    with self._mu:
                         self.stats["routed_by_key"] += 1
-                        return next(iter(self._index))
-                    n = len(self._index)
-                if n > 1:
+                    return candidates[0]
+                if len(candidates) > 1:
                     raise AmbiguousRouteError(
-                        f"gateway serves {n} artifacts; name one via 'artifact' "
-                        "or a 'route' selector"
+                        f"gateway serves {len(candidates)} artifacts; name one "
+                        "via 'artifact' or a 'route' selector"
                     )
-            if attempt == 0:
+            if rescan and attempt == 0:
                 self.refresh()  # on-demand discovery before giving up
         with self._mu:
             self.stats["unknown"] += 1
-        what = (
-            f"artifact {artifact!r}" if artifact is not None
-            else f"route {dict(route)}" if route
-            else "empty store"
-        )
+        if artifact is not None:
+            what = f"artifact {artifact!r}"
+        elif route:
+            what = f"route {dict(route)}"
+        elif kinds is not None:
+            # the store may be non-empty but hold only non-sweep kinds
+            # (e.g. after `measure.cli run` + `fit`, before `build`) --
+            # "empty store" would contradict the indexed count printed next
+            what = f"an unselected query (no {'/'.join(kinds)}-kind artifact stored)"
+        else:
+            what = "empty store"
         raise UnknownArtifactError(
             f"no stored artifact matches {what} "
             f"({len(self)} artifacts indexed; GET /v1/artifacts lists them)"
@@ -268,6 +326,11 @@ class Gateway:
             row = self._index.get(key)
         if row is None:
             raise UnknownArtifactError(f"artifact {key!r} is not indexed")
+        if row.get("kind", "sweep") != "sweep":
+            raise WrongArtifactKindError(
+                f"artifact {key!r} is a {row.get('kind')!r} manifest; only "
+                "sweep artifacts serve queries"
+            )
         store: ArtifactStore = row["store"]
         art = store.get(key)
         if art is None:  # deleted between index and query
@@ -301,6 +364,96 @@ class Gateway:
             self.stats["requests"] += 1
         key = self.resolve(artifact, route)
         return self.server_for(key).query(request)
+
+    def query_many(
+        self,
+        queries: Sequence[
+            Tuple[QueryRequest, Optional[str], Optional[Mapping[str, Any]]]
+        ],
+    ) -> List[Any]:
+        """Answer N routed queries in one call (the ``/v1/query_many``
+        body). Queries are resolved individually, grouped by artifact, and
+        each group rides that artifact's ``CodesignServer.query_many``
+        stacked matmul -- per-artifact microbatching without waiting on a
+        rendezvous window. Returns, per query *in order*, either a
+        :class:`QueryResponse` or a ``(code, message)`` error pair: one
+        unroutable or poisonous query never fails its batchmates."""
+        results: List[Any] = [None] * len(queries)
+        groups: Dict[str, List[int]] = {}
+        with self._mu:
+            self.stats["requests"] += len(queries)
+            self.stats["batched_requests"] += len(queries)
+        # at most ONE on-demand store re-scan per batch: the first
+        # unresolvable query pays it, the rest fail fast (a batch of
+        # unknown keys must not trigger MAX_BATCH full-store scans)
+        rescanned = False
+        for i, (request, artifact, route) in enumerate(queries):
+            try:
+                key = self.resolve(artifact, route, rescan=not rescanned)
+            except UnknownArtifactError as e:
+                rescanned = True
+                results[i] = (e.code, str(e))
+                continue
+            except GatewayError as e:
+                results[i] = (e.code, str(e))
+                continue
+            except (KeyError, ValueError) as e:
+                results[i] = ("bad_request", str(e.args[0] if e.args else e))
+                continue
+            groups.setdefault(key, []).append(i)
+        def answer_group(key: str, idxs: List[int]) -> None:
+            try:
+                _answer_group(key, idxs)
+            except Exception as e:  # noqa: BLE001 - NOTHING may escape: an
+                # unfilled slot would crash the whole batch's encoding
+                # (and the pool path would swallow the exception silently)
+                for i in idxs:
+                    if results[i] is None:
+                        results[i] = ("internal", f"{type(e).__name__}: {e}")
+
+        def _answer_group(key: str, idxs: List[int]) -> None:
+            try:
+                # server_for can also raise outside the GatewayError
+                # family (e.g. a corrupt artifact failing its content-key
+                # check with ValueError) -- the outer boundary catches it
+                srv = self.server_for(key)
+            except GatewayError as e:
+                for i in idxs:
+                    results[i] = (e.code, str(e))
+                return
+            try:
+                for i, resp in zip(idxs, srv.query_many([queries[i][0] for i in idxs])):
+                    results[i] = resp
+            except Exception:  # noqa: BLE001 - isolate the poison pill
+                for i in idxs:
+                    try:
+                        results[i] = srv.query(queries[i][0])
+                    except GatewayError as e:
+                        results[i] = (e.code, str(e))
+                    except (KeyError, ValueError) as e:
+                        results[i] = (
+                            "bad_request", str(e.args[0] if e.args else e)
+                        )
+                    except Exception as e:  # noqa: BLE001 - boundary
+                        results[i] = ("internal", f"{type(e).__name__}: {e}")
+
+        if len(groups) <= 1:
+            for key, idxs in groups.items():
+                answer_group(key, idxs)
+        else:
+            # overlap the per-artifact stacked matmuls: groups answer
+            # concurrently (each writes disjoint result indices), matching
+            # what concurrent single-endpoint requests would get from the
+            # threaded HTTP server -- but on a pool BOUNDED by the server
+            # pool size: a batch pinning 1024 distinct artifacts must not
+            # spawn 1024 threads thrashing an 8-server LRU.
+            from concurrent.futures import ThreadPoolExecutor
+
+            workers = min(len(groups), self.pool_size)
+            with ThreadPoolExecutor(max_workers=workers) as pool:
+                for key, idxs in groups.items():
+                    pool.submit(answer_group, key, idxs)
+        return results
 
     def health(self) -> Dict[str, Any]:
         with self._mu:
@@ -358,7 +511,8 @@ class _Handler(BaseHTTPRequestHandler):
             ).encode()
             self._send(200, body)
         else:
-            self._send_error(404, "not_found", f"no such endpoint {self.path!r}")
+            self._send_error(wire.ERROR_HTTP_STATUS["not_found"], "not_found",
+                             f"no such endpoint {self.path!r}")
 
     def do_POST(self) -> None:  # noqa: N802
         try:
@@ -370,14 +524,22 @@ class _Handler(BaseHTTPRequestHandler):
                 n = self.gateway.refresh()
                 self._send(200, json.dumps({"ok": True, "artifacts": n}).encode())
                 return
+            if self.path == "/v1/query_many":
+                queries = wire.decode_request_many(data)
+                results = self.gateway.query_many(queries)
+                self._send(200, wire.encode_response_many(results))
+                return
             if self.path != "/v1/query":
-                self._send_error(404, "not_found", f"no such endpoint {self.path!r}")
+                self._send_error(wire.ERROR_HTTP_STATUS["not_found"], "not_found",
+                             f"no such endpoint {self.path!r}")
                 return
             request, artifact, route = wire.decode_request(data)
             response = self.gateway.query(request, artifact=artifact, route=route)
             self._send(200, wire.encode_response(response))
         except wire.WireError as e:
-            self._send_error(400, e.code, str(e))
+            self._send_error(
+                wire.ERROR_HTTP_STATUS.get(e.code, 400), e.code, str(e)
+            )
         except GatewayError as e:
             self._send_error(e.http_status, e.code, str(e))
         except (KeyError, ValueError) as e:

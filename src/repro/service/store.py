@@ -58,11 +58,25 @@ from repro.core.solver import LATTICE_2D, LATTICE_3D, TileLattice
 from repro.core.timemodel import GPUSpec
 from repro.core.workload import Workload
 
-__all__ = ["FORMAT_VERSION", "Artifact", "ArtifactStore", "artifact_spec", "spec_key"]
+__all__ = [
+    "FORMAT_VERSION",
+    "KINDS",
+    "Artifact",
+    "ArtifactStore",
+    "artifact_spec",
+    "spec_key",
+]
 
 #: bump when the on-disk layout or the solver semantics change; old
 #: artifacts then read as misses (the store rebuilds, never mis-serves).
 FORMAT_VERSION = 1
+
+#: manifest kinds one store can hold. "sweep" is the original (C, H)
+#: optima matrix (manifest + cell_time.npy + arrays.npz); "measurement"
+#: and "calibration" are manifest-only JSON artifacts written by
+#: :mod:`repro.measure` (timing runs / refitted machine parameters).
+#: Manifests written before kinds existed read as "sweep".
+KINDS = ("sweep", "measurement", "calibration")
 
 #: engines whose optima matrices are bit-identical share one content
 #: address: "sharded" is the same compiled program as "jax", merely
@@ -162,6 +176,17 @@ class Artifact:
 
     # ---- shapes / metadata ------------------------------------------------
     @property
+    def kind(self) -> str:
+        """Manifest kind; pre-kind manifests are sweep artifacts."""
+        return self.manifest.get("kind", "sweep")
+
+    @property
+    def payload(self) -> dict:
+        """The JSON body of a manifest-only artifact (measurement run /
+        calibration); empty for sweep artifacts."""
+        return self.manifest.get("payload", {})
+
+    @property
     def n_cells(self) -> int:
         return int(self.manifest["shapes"]["cells"])
 
@@ -184,15 +209,25 @@ class Artifact:
         Derivable from the (small) JSON manifest alone -- listing a fleet
         store never mmaps a matrix. Falls back to recomputing the fields
         for artifacts written before the manifest grew a ``"routing"``
-        block (same format version, older writer)."""
+        block (same format version, older writer). Non-sweep kinds
+        (measurement / calibration manifests) carry whatever their writer
+        put in the routing block, plus key/kind/format_version."""
         m = self.manifest
         spec = m.get("spec", {})
         r = dict(m.get("routing") or {})
+        if self.kind != "sweep":
+            r.update(
+                key=self.key,
+                kind=self.kind,
+                format_version=m.get("format_version"),
+            )
+            return r
         r.setdefault("gpu", m["gpu"]["name"])
         r.setdefault("workload", m["workload"]["name"])
         r.setdefault("stencils", sorted(self.stencil_names))
         r.update(
             key=self.key,
+            kind=self.kind,
             hw_digest=spec.get("hw_digest"),
             engine=spec.get("engine", m.get("engine")),
             cells=self.n_cells,
@@ -355,6 +390,36 @@ class ArtifactStore:
                     fcntl.flock(ent[0], fcntl.LOCK_UN)
                     os.close(ent[0])
 
+    def _staged_write(self, key: str, write_files) -> Artifact:
+        """The shared commit discipline of :meth:`put` / :meth:`put_json`:
+        under the cross-process build lock, re-check for a racing winner,
+        stage via ``write_files(tmp_dir)`` in a temp dir, and
+        ``os.replace`` into place -- tolerating the rename failing only
+        when a concurrent same-key builder's artifact is already there
+        (content addressing guarantees the bytes match). Lives in ONE
+        place because the lost-race tolerance is subtle enough that two
+        copies would drift."""
+        with self.build_lock(key):
+            existing = self.get(key)
+            if existing is not None:  # a racing builder finished first
+                return existing
+            tmp = tempfile.mkdtemp(prefix=f".stage-{key}-", dir=self.root)
+            try:
+                write_files(tmp)
+                try:
+                    os.replace(tmp, self._path(key))
+                except OSError:
+                    if not os.path.exists(
+                        os.path.join(self._path(key), "manifest.json")
+                    ):
+                        raise  # real failure, not a lost same-key race
+            finally:
+                if os.path.exists(tmp):
+                    shutil.rmtree(tmp, ignore_errors=True)
+        art = self.get(key)
+        assert art is not None
+        return art
+
     def has(self, key: str) -> bool:
         """True iff ``key`` is stored AND readable at this format version."""
         return self.get(key) is not None
@@ -377,6 +442,7 @@ class ArtifactStore:
         extra: Optional[dict] = None,
         lattice_2d: Optional[TileLattice] = None,
         lattice_3d: Optional[TileLattice] = None,
+        routing_extra: Optional[dict] = None,
     ) -> Artifact:
         """Persist a sweep result; returns the (re)loaded lazy handle.
 
@@ -388,7 +454,11 @@ class ArtifactStore:
         or the whole artifact. ``lattice_2d``/``lattice_3d`` pin the key's
         lattice tables when the workload exercises only one dimensionality
         (otherwise inferred from the result's per-cell lattices, falling
-        back to the defaults)."""
+        back to the defaults). ``routing_extra`` merges additional
+        attributes into the manifest's routing block (e.g. the
+        ``calibration`` key of the fit a calibrated sweep derives from) --
+        routing is not part of the content address, so this never moves
+        the key."""
         lat2 = lattice_2d or next(
             (lat for lat in result.lattices if len(lat.t_s3) == 1), LATTICE_2D
         )
@@ -400,6 +470,7 @@ class ArtifactStore:
         manifest, arrays = result.artifact_payload()
         manifest.update(
             format_version=FORMAT_VERSION,
+            kind="sweep",
             key=key,
             spec=spec,
             engine=engine,
@@ -407,32 +478,106 @@ class ArtifactStore:
                     "hw": int(arrays["cell_time"].shape[1])},
             extra=extra or {},
         )
-        with self.build_lock(key):
-            existing = self.get(key)
-            if existing is not None:  # a racing builder finished first
-                return existing
-            tmp = tempfile.mkdtemp(prefix=f".stage-{key}-", dir=self.root)
-            try:
-                np.save(os.path.join(tmp, "cell_time.npy"), arrays["cell_time"])
-                np.savez_compressed(
-                    os.path.join(tmp, "arrays.npz"),
-                    **{k: v for k, v in arrays.items() if k != "cell_time"},
+        if routing_extra:
+            manifest["routing"] = {**manifest.get("routing", {}), **routing_extra}
+        def write_files(tmp: str) -> None:
+            np.save(os.path.join(tmp, "cell_time.npy"), arrays["cell_time"])
+            np.savez_compressed(
+                os.path.join(tmp, "arrays.npz"),
+                **{k: v for k, v in arrays.items() if k != "cell_time"},
+            )
+            with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                json.dump(manifest, f, indent=1)
+
+        return self._staged_write(key, write_files)
+
+    def put_json(
+        self,
+        kind: str,
+        payload: dict,
+        routing: Optional[dict] = None,
+        extra: Optional[dict] = None,
+    ) -> Artifact:
+        """Persist a manifest-only JSON artifact (measurement run,
+        calibration) content-addressed over its canonical payload.
+
+        Same staging/locking discipline as :meth:`put`; the key is a
+        sha256 over ``(format_version, kind, payload)``, so identical runs
+        dedupe and any payload change gets a fresh key. ``routing`` is the
+        attribute row a gateway indexes the artifact under (not hashed);
+        ``extra`` is free-form annotation (not hashed either).
+        """
+        if kind not in KINDS or kind == "sweep":
+            raise ValueError(
+                f"put_json stores manifest-only kinds {[k for k in KINDS if k != 'sweep']}, got {kind!r}"
+            )
+        spec = {
+            "format_version": FORMAT_VERSION,
+            "kind": kind,
+            "payload_digest": hashlib.sha256(
+                _canonical_json(payload).encode()
+            ).hexdigest(),
+        }
+        key = spec_key(spec)
+        manifest = {
+            "format_version": FORMAT_VERSION,
+            "kind": kind,
+            "key": key,
+            "spec": spec,
+            "routing": dict(routing or {}),
+            "payload": payload,
+            "extra": extra or {},
+        }
+        def write_files(tmp: str) -> None:
+            with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                json.dump(manifest, f, indent=1)
+
+        return self._staged_write(key, write_files)
+
+    def upgrade_manifests(self) -> List[str]:
+        """Backfill manifests written by older writers in place.
+
+        Legacy sweep manifests (pre-gateway) lack the ``"routing"`` block
+        and the ``"kind"`` tag; a gateway can still index them through
+        :meth:`Artifact.routing`'s derivation fallback, but every scan
+        re-derives and the rows stay partial (no hw_digest-independent
+        attrs a future writer might add). This rewrites each such manifest
+        with its derived routing block and ``kind: "sweep"``. The content
+        key hashes the *spec*, never the manifest bytes, so upgraded
+        artifacts keep their key (asserted) -- readers racing the rewrite
+        see either the old or the new manifest, both valid for the same
+        matrix. Returns the upgraded keys."""
+        upgraded: List[str] = []
+        for key in self.keys():
+            path = os.path.join(self._path(key), "manifest.json")
+            with open(path) as f:
+                manifest = json.load(f)
+            if "routing" in manifest and "kind" in manifest:
+                continue
+            with self.build_lock(key):
+                art = Artifact(self._path(key))
+                row = art.routing()  # derivation fallback fills the gaps
+                manifest = art.manifest
+                manifest["kind"] = art.kind
+                manifest["routing"] = {
+                    k: row[k]
+                    for k in ("gpu", "workload", "stencils")
+                    if k in row
+                }
+                assert manifest.get("key", key) == key, "manifest key drifted"
+                fd, tmp = tempfile.mkstemp(
+                    prefix=".manifest-", dir=self._path(key)
                 )
-                with open(os.path.join(tmp, "manifest.json"), "w") as f:
-                    json.dump(manifest, f, indent=1)
                 try:
-                    os.replace(tmp, self._path(key))
-                except OSError:
-                    if not os.path.exists(
-                        os.path.join(self._path(key), "manifest.json")
-                    ):
-                        raise  # real failure, not a lost same-key race
-            finally:
-                if os.path.exists(tmp):
-                    shutil.rmtree(tmp, ignore_errors=True)
-        art = self.get(key)
-        assert art is not None
-        return art
+                    with os.fdopen(fd, "w") as f:
+                        json.dump(manifest, f, indent=1)
+                    os.replace(tmp, path)
+                except BaseException:
+                    if os.path.exists(tmp):
+                        os.unlink(tmp)
+                    raise
+            upgraded.append(key)
+        return upgraded
 
     def keys(self) -> List[str]:
         """Sorted content keys of every (complete) stored artifact."""

@@ -40,7 +40,7 @@ from __future__ import annotations
 import dataclasses
 import json
 import math
-from typing import Any, Dict, Mapping, Optional, Tuple
+from typing import Any, Dict, Mapping, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -48,18 +48,48 @@ from .query import QueryRequest, QueryResponse
 
 __all__ = [
     "WIRE_VERSION",
+    "MAX_BATCH",
+    "ERROR_HTTP_STATUS",
     "WireError",
     "RemoteError",
     "encode_request",
     "decode_request",
+    "encode_request_many",
+    "decode_request_many",
     "encode_response",
     "decode_response",
+    "encode_response_many",
+    "decode_response_many",
     "encode_error",
 ]
 
 #: Wire (envelope) version. Bump only for incompatible envelope changes;
 #: additive response fields do NOT bump it (clients ignore unknowns).
+#: Adding the /v1/query_many envelope was additive (new endpoint, same
+#: per-query objects), so it did not bump the version.
 WIRE_VERSION = 1
+
+#: upper bound on queries per /v1/query_many envelope: a fat-finger guard
+#: (a million-query body would be decoded before any answer could say no),
+#: not a throughput ceiling -- clients chunk above it.
+MAX_BATCH = 1024
+
+#: THE code -> HTTP status registry: the gateway's exception classes and
+#: HTTP handler answer with these statuses, and the batched decoder
+#: re-derives per-element statuses from it (a /v1/query_many element
+#: arrives under the envelope's own HTTP 200, but its RemoteError must
+#: classify exactly like its single-query twin -- callers branch on
+#: ``http_status == 404`` etc.). One table, both directions: adding an
+#: error code means adding it here.
+ERROR_HTTP_STATUS = {
+    "bad_request": 400,
+    "unsupported_version": 400,
+    "wrong_artifact_kind": 400,
+    "unknown_artifact": 404,
+    "not_found": 404,
+    "ambiguous_route": 409,
+    "internal": 500,
+}
 
 #: request fields a v1 server accepts, mirroring QueryRequest exactly.
 _REQUEST_FIELDS = frozenset(f.name for f in dataclasses.fields(QueryRequest))
@@ -187,6 +217,12 @@ def decode_request(data: bytes) -> Tuple[QueryRequest, Optional[str], Optional[d
     unknown = set(obj) - {"v", "artifact", "route", "request"}
     if unknown:
         raise WireError(f"unknown envelope fields {sorted(unknown)}")
+    return _decode_query(obj)
+
+
+def _decode_query(obj: dict) -> Tuple[QueryRequest, Optional[str], Optional[dict]]:
+    """Shared body of the single and batched request decoders: one
+    ``{artifact?, route?, request}`` object -> the routed-query triple."""
     artifact = obj.get("artifact")
     if artifact is not None and not isinstance(artifact, str):
         raise WireError("'artifact' must be a string key")
@@ -226,13 +262,68 @@ def decode_request(data: bytes) -> Tuple[QueryRequest, Optional[str], Optional[d
     return request, artifact, route
 
 
+def encode_request_many(
+    queries: Sequence[
+        Tuple[QueryRequest, Optional[str], Optional[Mapping[str, Any]]]
+    ],
+) -> bytes:
+    """Serialize a ``POST /v1/query_many`` envelope: each element is a
+    ``(request, artifact, route)`` triple exactly as :func:`encode_request`
+    takes them, carried in one body so N queries cost one round trip."""
+    items = []
+    for request, artifact, route in queries:
+        body: Dict[str, Any] = {"request": dataclasses.asdict(request)}
+        if artifact is not None:
+            body["artifact"] = str(artifact)
+        if route:
+            body["route"] = dict(route)
+        items.append(body)
+    return _dumps({"v": WIRE_VERSION, "queries": items})
+
+
+def decode_request_many(
+    data: bytes,
+) -> list:
+    """Bytes -> list of ``(QueryRequest, artifact_key, route)`` triples.
+
+    Strict like :func:`decode_request`: one malformed query fails the
+    whole envelope with the offending index in the message (a server must
+    not answer a batch it only partially understood -- per-query *routing
+    and engine* failures, by contrast, are reported per query)."""
+    obj = _loads(data)
+    _check_version(obj, "request envelope")
+    unknown = set(obj) - {"v", "queries"}
+    if unknown:
+        raise WireError(f"unknown envelope fields {sorted(unknown)}")
+    queries = obj.get("queries")
+    if not isinstance(queries, list) or not queries:
+        raise WireError("'queries' must be a non-empty array of query objects")
+    if len(queries) > MAX_BATCH:
+        raise WireError(
+            f"batch of {len(queries)} exceeds the {MAX_BATCH}-query cap; "
+            "chunk the request"
+        )
+    out = []
+    for i, q in enumerate(queries):
+        if not isinstance(q, dict):
+            raise WireError(f"queries[{i}] must be an object")
+        unknown = set(q) - {"artifact", "route", "request"}
+        if unknown:
+            raise WireError(f"queries[{i}]: unknown fields {sorted(unknown)}")
+        try:
+            out.append(_decode_query(q))
+        except WireError as e:
+            raise WireError(f"queries[{i}]: {e}", code=e.code) from e
+    return out
+
+
 # ---------------------------------------------------------------------------
 # responses / errors
 # ---------------------------------------------------------------------------
-def encode_response(response: QueryResponse) -> bytes:
-    """Serialize a success answer. Deterministic (canonical JSON), so two
-    equal responses always encode to identical bytes -- the property the
-    gateway's byte-identity acceptance test leans on."""
+def _response_payload(response: QueryResponse) -> Dict[str, Any]:
+    """The canonical JSON-able body of one answer -- shared by the single
+    and batched encoders so a query_many element is field-for-field the
+    single-query payload (byte-identity composes)."""
     r: Dict[str, Any] = {
         "artifact_key": response.artifact_key,
         "best_index": int(response.best_index),
@@ -248,7 +339,14 @@ def encode_response(response: QueryResponse) -> bytes:
     if response.baseline_best_index is not None:
         r["baseline_best_index"] = int(response.baseline_best_index)
         r["baseline_best_gflops"] = float(response.baseline_best_gflops)
-    return _dumps({"v": WIRE_VERSION, "ok": True, "response": r})
+    return r
+
+
+def encode_response(response: QueryResponse) -> bytes:
+    """Serialize a success answer. Deterministic (canonical JSON), so two
+    equal responses always encode to identical bytes -- the property the
+    gateway's byte-identity acceptance test leans on."""
+    return _dumps({"v": WIRE_VERSION, "ok": True, "response": _response_payload(response)})
 
 
 def decode_response(data: bytes, http_status: int = 0) -> QueryResponse:
@@ -264,7 +362,13 @@ def decode_response(data: bytes, http_status: int = 0) -> QueryResponse:
             str(err.get("message", "(no message)")),
             http_status,
         )
-    r = obj.get("response")
+    return _parse_response_payload(obj.get("response"))
+
+
+def _parse_response_payload(r: Any) -> QueryResponse:
+    """One decoded-JSON response object -> :class:`QueryResponse` (the
+    inverse of :func:`_response_payload`); shared by the single and
+    batched decoders."""
     if not isinstance(r, dict):
         raise WireError("'response' must be an object")
     r = _unjsonify(r)
@@ -282,6 +386,68 @@ def decode_response(data: bytes, http_status: int = 0) -> QueryResponse:
         cached=bool(r.get("cached", False)),
         batch_size=int(r.get("batch_size", 1)),
     )
+
+
+def encode_response_many(
+    results: Sequence[Union[QueryResponse, Tuple[str, str]]],
+) -> bytes:
+    """Serialize a ``/v1/query_many`` answer. Each element is either a
+    :class:`QueryResponse` (``{"ok": true, "response": ...}`` with the
+    exact single-query payload) or a ``(code, message)`` pair for a query
+    that failed routing/decoding/reduction (``{"ok": false, "error":
+    ...}``) -- one bad query never fails its batchmates. The envelope
+    itself is HTTP 200: per-query status lives per element."""
+    items = []
+    for r in results:
+        if isinstance(r, QueryResponse):
+            items.append({"ok": True, "response": _response_payload(r)})
+        else:
+            code, message = r
+            items.append(
+                {"ok": False, "error": {"code": str(code), "message": str(message)}}
+            )
+    return _dumps({"v": WIRE_VERSION, "ok": True, "results": items})
+
+
+def decode_response_many(
+    data: bytes, http_status: int = 0
+) -> list:
+    """Bytes -> list of :class:`QueryResponse` | :class:`RemoteError`
+    (per-query failures are *returned*, not raised -- the caller decides
+    what a partial batch means). A whole-envelope error (malformed batch,
+    unsupported version) still raises. Per-element errors carry the HTTP
+    status their *code* maps to on the single-query endpoint (the
+    envelope itself is 200), so ``RemoteError.http_status`` means the
+    same thing whichever endpoint produced it."""
+    obj = _loads(data)
+    _check_version(obj, "response envelope")
+    if not obj.get("ok"):
+        err = obj.get("error") or {}
+        raise RemoteError(
+            str(err.get("code", "unknown")),
+            str(err.get("message", "(no message)")),
+            http_status,
+        )
+    results = obj.get("results")
+    if not isinstance(results, list):
+        raise WireError("'results' must be an array")
+    out = []
+    for item in results:
+        if not isinstance(item, dict):
+            raise WireError("each query_many result must be an object")
+        if item.get("ok"):
+            out.append(_parse_response_payload(item.get("response")))
+        else:
+            err = item.get("error") or {}
+            code = str(err.get("code", "unknown"))
+            out.append(
+                RemoteError(
+                    code,
+                    str(err.get("message", "(no message)")),
+                    ERROR_HTTP_STATUS.get(code, 0),
+                )
+            )
+    return out
 
 
 def encode_error(code: str, message: str) -> bytes:
