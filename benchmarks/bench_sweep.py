@@ -31,6 +31,7 @@ from .common import (
     STENCIL_CLASSES as CLASSES,
     cache_json,
     emit,
+    lm_enabled,
     refine_enabled,
     skey,
     smoke,
@@ -87,6 +88,73 @@ def _refine_stage(cls: str, res) -> dict:
     # re-evaluation -- allow the cross-engine noise bound (same RTOL as the
     # equivalence tests), not a bitwise comparison
     assert wt1 <= wt0 * (1 + 1e-5), "refine regressed the lattice optimum"
+    return rec
+
+
+def _lm_stage() -> dict:
+    """Time the LM cell family's eq.-(18) sweep (mesh factorizations x
+    parallelism plans; see docs/lm_codesign.md) on both engines and check
+    they agree -- feasibility bit-equal, achieved times within float32
+    noise. The LM lattice is tiny next to a stencil sweep, so this stage
+    reports the sweep *and* the warm re-dispatch cost, smoke or not; smoke
+    shrinks the models (``cfg.reduced()``) and the chip budget so the
+    ``jax.eval_shape`` parameter counting stays CI-cheap."""
+    from repro.configs import get_arch
+    from repro.core.lmcells import lm_codesign, lm_workload
+
+    names = ["llama3-8b", "mixtral-8x22b"]
+    if smoke():
+        archs = [get_arch(n).reduced() for n in names]
+        max_chips = 64
+    else:
+        archs = list(names)
+        max_chips = 512
+    wl = lm_workload(archs=archs, name="bench-lm")
+
+    t0 = time.perf_counter()
+    res_np = lm_codesign(wl, max_chips=max_chips, engine="numpy")
+    t_np = time.perf_counter() - t0
+
+    rec = {
+        "models": names,
+        "smoke_reduced": smoke(),
+        "cells": len(wl.cells),
+        "hw_points": len(res_np.hw),
+        "max_chips": max_chips,
+        "numpy_s": round(t_np, 4),
+    }
+    derived = f"{len(wl.cells)} cells x {len(res_np.hw)} meshes: numpy {t_np:.2f}s"
+    if sweep.HAVE_JAX:
+        t0 = time.perf_counter()
+        res_jax = lm_codesign(wl, max_chips=max_chips, engine="jax")
+        t_cold = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        lm_codesign(wl, max_chips=max_chips, engine="jax")
+        t_warm = time.perf_counter() - t0
+
+        finite = np.isfinite(res_np.cell_time)
+        assert np.array_equal(finite, np.isfinite(res_jax.cell_time)), (
+            "LM engines disagree on feasibility"
+        )
+        gap = float(np.max(np.abs(
+            res_jax.cell_time[finite] / res_np.cell_time[finite] - 1.0
+        ))) if finite.any() else 0.0
+        # jax runs the grid in float32; the oracle is float64 -- the tests
+        # (tests/test_lmcells.py) pin the tie-aware argmin contract, the
+        # bench just refuses to report a speedup bought with a wrong answer
+        assert gap < 1e-4, f"LM engines diverged: {gap}"
+        rec.update(
+            jax_cold_s=round(t_cold, 4), jax_warm_s=round(t_warm, 4),
+            max_rel_gap=gap,
+        )
+        derived += (
+            f", jax cold {t_cold:.2f}s / warm {t_warm:.3f}s; "
+            f"max rel gap {gap:.1e}"
+        )
+    else:
+        derived += " (jax not installed; oracle only)"
+    cache_json(skey("sweep_lm"), lambda: rec, force=True)
+    emit("sweep_lm", t_np * 1e6, derived)
     return rec
 
 
@@ -187,6 +255,8 @@ def run() -> dict | None:
         "classes": classes,
         "engines_total_s": {k: round(v, 4) for k, v in totals.items()},
     }
+    if lm_enabled():
+        rec["lm"] = _lm_stage()
     if run_sharded:
         # scaling efficiency: warm speedup over the single-device engine
         # per mesh device. 1.0 = perfect linear scaling; meaningful only

@@ -37,6 +37,12 @@ def refine_enabled() -> bool:
     return os.environ.get("REPRO_BENCH_REFINE", "") == "1"
 
 
+def lm_enabled() -> bool:
+    """True when ``benchmarks/run.py --lm`` asked the sweep suite to time
+    the LM cell family (mesh-factorization sweep) alongside the stencils."""
+    return os.environ.get("REPRO_BENCH_LM", "") == "1"
+
+
 def skey(key: str) -> str:
     """Artifact cache key, segregated per mode so smoke runs never poison
     (or read) the full-fidelity cache."""

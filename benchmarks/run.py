@@ -55,6 +55,12 @@ def main() -> None:
         help="sweep suite: add the batched coordinate-descent refine stage "
         "(speedup/quality delta lands in the artifact JSON)",
     )
+    ap.add_argument(
+        "--lm",
+        action="store_true",
+        help="sweep suite: also time the LM cell family (mesh-factorization "
+        "sweep over the repo's model configs; docs/lm_codesign.md)",
+    )
     args = ap.parse_args()
     if args.smoke:
         # env (not a global) so suite modules can check common.smoke()
@@ -62,6 +68,8 @@ def main() -> None:
         os.environ["REPRO_BENCH_SMOKE"] = "1"
     if args.refine:
         os.environ["REPRO_BENCH_REFINE"] = "1"
+    if args.lm:
+        os.environ["REPRO_BENCH_LM"] = "1"
 
     from . import (
         bench_area,

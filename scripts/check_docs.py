@@ -1,0 +1,159 @@
+#!/usr/bin/env python
+"""Executable-docs checker: run tagged fenced blocks, verify relative links.
+
+Two guarantees over ``docs/*.md`` + ``README.md``:
+
+1. **Runnable blocks run.** A fenced block whose info string carries the
+   ``runnable`` tag (` ```bash runnable ` or ` ```python runnable `) is
+   executed against a throwaway store (``$REPRO_STORE`` points into a temp
+   dir; ``src/`` is prepended to ``PYTHONPATH``) with ``bash -euo
+   pipefail`` / the current interpreter. Blocks in one file share the
+   store and accumulate into one script per language *per file*, so a
+   walkthrough can build an artifact in one block and query it in the
+   next. Untagged blocks are prose -- never executed.
+
+2. **Relative links resolve.** Every ``[text](target)`` whose target is
+   not an absolute URL/anchor must exist on disk relative to the doc.
+
+Exit 0 iff both hold everywhere; failures print per-file with the
+offending block/link. CI runs this in the docs lane; locally:
+
+    python scripts/check_docs.py            # all docs
+    python scripts/check_docs.py docs/lm_codesign.md
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import re
+import subprocess
+import sys
+import tempfile
+from typing import Dict, List, Tuple
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+FENCE_RE = re.compile(
+    r"^```(?P<info>[^\n`]*)\n(?P<body>.*?)^```\s*$", re.M | re.S
+)
+# [text](target) -- skipping images is fine (none in the tree), but the
+# pattern tolerates them; inline code spans are cheaply excluded by the
+# negative char class on the text.
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def default_docs() -> List[str]:
+    docs = sorted(
+        os.path.join("docs", n)
+        for n in os.listdir(os.path.join(REPO, "docs"))
+        if n.endswith(".md")
+    )
+    return ["README.md"] + docs
+
+
+def runnable_blocks(text: str) -> List[Tuple[str, str]]:
+    """(language, body) for every ``runnable``-tagged fence, in order."""
+    out = []
+    for m in FENCE_RE.finditer(text):
+        info = m.group("info").split()
+        if len(info) >= 2 and info[1] == "runnable":
+            lang = info[0]
+            if lang not in ("bash", "sh", "python"):
+                raise ValueError(f"runnable tag on unsupported language {lang!r}")
+            out.append(("bash" if lang == "sh" else lang, m.group("body")))
+    return out
+
+
+def check_links(path: str, text: str) -> List[str]:
+    """Relative link targets that do not exist on disk."""
+    # links inside fenced code are illustrative, not navigation
+    prose = FENCE_RE.sub("", text)
+    base = os.path.dirname(os.path.join(REPO, path))
+    bad = []
+    for target in LINK_RE.findall(prose):
+        if target.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        rel = target.split("#", 1)[0]
+        if not rel:
+            continue
+        resolved = os.path.normpath(os.path.join(base, rel))
+        if not resolved.startswith(REPO + os.sep):
+            continue  # GitHub-relative idioms (../../actions/...) -- not disk paths
+        if not os.path.exists(resolved):
+            bad.append(target)
+    return bad
+
+
+def run_blocks(path: str, blocks: List[Tuple[str, str]]) -> Tuple[bool, str]:
+    """Execute a file's runnable blocks, concatenated per language in doc
+    order, inside one throwaway store. Returns (ok, combined output)."""
+    with tempfile.TemporaryDirectory(prefix="docscheck-") as tmp:
+        env = dict(os.environ)
+        src = os.path.join(REPO, "src")
+        prev = env.get("PYTHONPATH")
+        env["PYTHONPATH"] = src + (os.pathsep + prev if prev else "")
+        env["REPRO_STORE"] = os.path.join(tmp, "store")
+        scripts: Dict[str, List[str]] = {}
+        for lang, body in blocks:
+            scripts.setdefault(lang, []).append(body)
+        for lang, bodies in scripts.items():
+            joined = "\n".join(bodies)
+            if lang == "bash":
+                cmd = ["bash", "-euo", "pipefail", "-c", joined]
+            else:
+                cmd = [sys.executable, "-c", joined]
+            proc = subprocess.run(
+                cmd, env=env, cwd=tmp, capture_output=True, text=True,
+                timeout=600,
+            )
+            if proc.returncode != 0:
+                return False, (
+                    f"[{path}] {lang} blocks exited {proc.returncode}\n"
+                    f"--- script ---\n{joined}\n"
+                    f"--- stdout ---\n{proc.stdout}\n"
+                    f"--- stderr ---\n{proc.stderr}"
+                )
+    return True, ""
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("docs", nargs="*", help="doc files (default: README + docs/*.md)")
+    ap.add_argument("--links-only", action="store_true",
+                    help="skip block execution (fast local pass)")
+    args = ap.parse_args(argv)
+    failures = 0
+    ran = 0
+    for path in args.docs or default_docs():
+        full = os.path.join(REPO, path)
+        with open(full) as f:
+            text = f.read()
+        bad = check_links(path, text)
+        for target in bad:
+            print(f"FAIL {path}: dead relative link ({target})")
+            failures += 1
+        try:
+            blocks = runnable_blocks(text)
+        except ValueError as e:
+            print(f"FAIL {path}: {e}")
+            failures += 1
+            continue
+        if blocks and not args.links_only:
+            ok, output = run_blocks(path, blocks)
+            ran += len(blocks)
+            if ok:
+                print(f"ok   {path}: {len(blocks)} runnable block(s), "
+                      f"{len(bad)} dead link(s)")
+            else:
+                print(f"FAIL {path}:\n{output}")
+                failures += 1
+        else:
+            print(f"ok   {path}: links checked ({len(blocks)} runnable "
+                  f"block(s) {'skipped' if args.links_only else 'found'})")
+    print(f"{failures} failure(s), {ran} block(s) executed")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -8,6 +8,8 @@ from .base import (  # noqa: F401
     MoEConfig,
     ShapeSpec,
     SSMConfig,
+    get,
     get_arch,
+    list_archs,
     register,
 )

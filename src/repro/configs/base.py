@@ -19,6 +19,8 @@ __all__ = [
     "ARCHS",
     "register",
     "get_arch",
+    "get",
+    "list_archs",
     "SHAPES",
     "ShapeSpec",
 ]
@@ -26,6 +28,15 @@ __all__ = [
 
 @dataclasses.dataclass(frozen=True)
 class MoEConfig:
+    """Mixture-of-experts sublayer parameters.
+
+    ``n_experts`` routed experts, of which ``top_k`` are active per token;
+    each expert is an MLP with hidden width ``d_ff`` (units: model
+    dimensions, not bytes). ``capacity_factor`` scales per-expert token
+    buffers relative to a perfectly balanced router (dimensionless ratio);
+    ``router_aux_weight`` is the load-balancing auxiliary-loss coefficient.
+    """
+
     n_experts: int
     top_k: int
     d_ff: int  # per-expert hidden size
@@ -38,6 +49,14 @@ class MoEConfig:
 
 @dataclasses.dataclass(frozen=True)
 class SSMConfig:
+    """State-space (Mamba-2 / SSD) mixer parameters.
+
+    ``d_state`` is the per-head recurrent state width, ``d_conv`` the depth
+    of the causal conv preceding the SSM, ``expand`` the inner-width
+    multiplier over ``d_model``, and ``chunk`` the SSD scan chunk length in
+    tokens.
+    """
+
     d_state: int = 128
     d_conv: int = 4
     expand: int = 2
@@ -48,6 +67,10 @@ class SSMConfig:
 
 @dataclasses.dataclass(frozen=True)
 class AttnConfig:
+    """Attention variant. ``kind`` selects full softmax attention, sliding
+    window (``swa``, window size in tokens), or DeepSeek's multi-head latent
+    attention (``mla``) whose low-rank dims are per-head widths."""
+
     kind: str = "full"  # full | swa | mla
     window: int = 0  # SWA window
     # MLA (DeepSeek): low-rank Q/KV compression + decoupled RoPE dims
@@ -59,6 +82,18 @@ class AttnConfig:
 
 @dataclasses.dataclass(frozen=True)
 class ArchConfig:
+    """One published model architecture, frozen.
+
+    Field units: ``n_layers``/``n_enc_layers`` count transformer (or SSM)
+    blocks; ``d_model``/``d_ff``/``head_dim`` are activation widths in model
+    dimensions (elements, not bytes — multiply by the ``dtype`` width for
+    bytes); ``n_heads``/``n_kv_heads`` count query/KV heads (GQA when
+    ``n_kv_heads < n_heads``); ``vocab`` is the embedding-table row count;
+    ``rope_theta`` is the rotary base frequency (dimensionless). ``dtype``
+    names the parameter/activation storage dtype and is what converts
+    element counts into HBM bytes in the roofline model.
+    """
+
     name: str
     family: str  # dense | moe | ssm | hybrid | audio | vlm
     n_layers: int
@@ -175,6 +210,7 @@ ARCHS: Dict[str, ArchConfig] = {}
 
 
 def register(cfg: ArchConfig) -> ArchConfig:
+    """Add ``cfg`` to the registry; raises ``ValueError`` on a duplicate name."""
     if cfg.name in ARCHS:
         raise ValueError(f"duplicate arch {cfg.name}")
     ARCHS[cfg.name] = cfg
@@ -182,12 +218,27 @@ def register(cfg: ArchConfig) -> ArchConfig:
 
 
 def get_arch(name: str) -> ArchConfig:
-    # import side-effect registration on first use
-    from . import _register_all  # noqa: F401
+    """Look up a registered architecture by ``--arch`` name.
+
+    Triggers discovery of every config module on first use, so callers never
+    see a partially populated registry.
+    """
+    from . import _register_all  # noqa: F401  (side-effect registration)
 
     if name not in ARCHS:
         raise KeyError(f"unknown arch {name!r}; known: {sorted(ARCHS)}")
     return ARCHS[name]
+
+
+def list_archs() -> Tuple[str, ...]:
+    """All registered architecture names, sorted (deterministic across runs)."""
+    from . import _register_all  # noqa: F401  (side-effect registration)
+
+    return tuple(sorted(ARCHS))
+
+
+#: Short alias — ``repro.configs.get(name)``.
+get = get_arch
 
 
 # ---------------------------------------------------------------------------
@@ -195,6 +246,12 @@ def get_arch(name: str) -> ArchConfig:
 # ---------------------------------------------------------------------------
 @dataclasses.dataclass(frozen=True)
 class ShapeSpec:
+    """One workload shape: ``seq_len`` tokens of context per sequence and
+    ``global_batch`` concurrent sequences across the whole mesh. ``kind``
+    selects the cost model — ``train`` (fwd+bwd over all tokens),
+    ``prefill`` (fwd over all tokens), or ``decode`` (one new token per
+    sequence per step against a ``seq_len``-deep KV cache)."""
+
     name: str
     seq_len: int
     global_batch: int
@@ -202,6 +259,8 @@ class ShapeSpec:
 
     @property
     def tokens(self) -> int:
+        """Tokens processed per step (for decode this is tokens *resident*,
+        not tokens generated — decode emits ``global_batch`` per step)."""
         return self.seq_len * self.global_batch
 
 

@@ -432,7 +432,18 @@ def codesign(
     the first n, or an explicit device sequence; setting it implies the
     mesh engine (``"auto"`` promotes to ``"sharded"``, non-mesh engines
     reject it rather than silently ignore it).
+
+    Dispatches on the workload's cell family: LM op-graph workloads
+    (``workload.family == "lm"``) route to :func:`repro.core.lmcells
+    .lm_codesign`, whose hardware axis is mesh factorizations of a chip
+    budget (``hw`` must then be an :class:`~repro.core.lmcells
+    .LMHardwareSpace` or None); the stencil-specific knobs (gpu, area
+    model, tile lattices) do not apply there.
     """
+    if getattr(workload, "family", "stencil") == "lm":
+        from .lmcells import lm_codesign
+
+        return lm_codesign(workload, hw=hw, engine=engine)
     if hw is None:
         hw = enumerate_hw_space(area_model, max_area=max_area)
     eng = _resolve_engine(engine, len(hw), devices)

@@ -24,6 +24,9 @@ from ..configs.base import ArchConfig, ShapeSpec
 
 __all__ = ["MeshPlan", "lm_roofline", "HW"]
 
+#: TPU v5e per-chip constants. Units: ``peak_flops_bf16`` FLOP/s,
+#: ``hbm_bw``/``ici_link_bw``/``dci_link_bw`` bytes/s, ``ici_links`` count
+#: (the torus gives each chip 4 usable links), ``hbm_bytes`` bytes.
 HW = {
     "peak_flops_bf16": 197e12,
     "hbm_bw": 819e9,
@@ -36,7 +39,18 @@ HW = {
 
 @dataclasses.dataclass(frozen=True)
 class MeshPlan:
-    """One point in the hardware x software design space."""
+    """One point in the hardware x software design space.
+
+    Hardware axes (chip-count factorization, ``chips = pod*data*model``):
+    ``pod`` pods bridged by DCN, ``data``-way data parallelism within a
+    pod, ``model``-way tensor parallelism. Software knobs (the paper's
+    tile-size analogue): ``microbatches`` splits the global batch into
+    sequential pipeline passes; ``remat`` trades +50% forward FLOPs for a
+    4x smaller activation working set when "full"; ``fsdp`` additionally
+    shards weights over the data axis (all-gathering them per pass);
+    ``compress_grads`` sends int8 (1-byte) instead of f32 gradients in the
+    data-parallel all-reduce.
+    """
 
     pod: int
     data: int
@@ -66,7 +80,27 @@ def lm_roofline(
     n_params: int,
     n_active: int,
 ) -> Dict:
-    """Three analytic roofline terms + feasibility for one design point."""
+    """Three analytic roofline terms + feasibility for one design point.
+
+    Args:
+        cfg: architecture (only ``d_model``/``n_layers`` enter directly;
+            expert sparsity is already folded into ``n_active``).
+        shape: workload shape; ``kind`` picks the cost model. For decode,
+            "one step" means one token generated per sequence, so the
+            compute term scales with ``global_batch`` tokens while the
+            memory term streams the full ``seq_len``-deep KV cache.
+        plan: mesh factorization + software knobs (see :class:`MeshPlan`).
+        n_params: total parameter count (elements, bf16-stored).
+        n_active: parameters touched per token (``< n_params`` for MoE).
+
+    Returns a dict of per-step wall-clock seconds — ``compute_s``,
+    ``memory_s``, ``collective_s``, their max ``bound_s`` with the
+    ``dominant`` term's name — plus the per-chip working set ``hbm_bytes``
+    and ``fits`` (True iff it is under 90% of HBM, the eq. 9/11 analogue).
+    All terms are smooth in the plan parameters, so a vectorized twin
+    (:mod:`repro.core.lmcells`) can evaluate the whole lattice under
+    ``jax.vmap``/``jit``.
+    """
     chips = plan.chips
     tokens = shape.tokens if shape.kind != "decode" else shape.global_batch
     train = shape.kind == "train"

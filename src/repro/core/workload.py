@@ -8,16 +8,25 @@ frequencies. The paper's experiments use the six-stencil suite over
 
 with uniform frequencies ("we assumed all six stencils equally likely, and
 that each size combination also equally likely", §IV.B).
+
+Eq. (17)/(18) never look inside a cell: the objective only needs each
+cell's occurrence frequency and a per-design-point time/feasibility
+function that the sweep engine can trace. That contract is the
+:class:`Cell` protocol below. ``(stencil, size)`` cells
+(:class:`WorkloadCell`, family ``"stencil"``) are one instance; LM op-graph
+cells over real model configs (:mod:`repro.core.lmcells`, family ``"lm"``)
+are another, and ``codesign()`` dispatches on :attr:`Workload.family`.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, List, Protocol, Sequence, Tuple, runtime_checkable
 
 from .timemodel import STENCILS, ProblemSize, StencilSpec
 
 __all__ = [
+    "Cell",
     "WorkloadCell",
     "Workload",
     "paper_sizes",
@@ -28,17 +37,54 @@ SZ_S = (4096, 8192, 12288, 16384)
 SZ_T = (1024, 2048, 4096, 8192, 16384)
 
 
+@runtime_checkable
+class Cell(Protocol):
+    """What eq. (18)'s inner minimization needs from a workload cell.
+
+    A cell is one independently-optimized unit of work: it exposes its
+    occurrence frequency (``freq``), a ``family`` tag the sweep engine
+    dispatches on, and a stable ``label`` used for grouping in query-time
+    frequency overrides and artifact manifests. The per-design-point time
+    model itself lives with the family's sweep implementation (it is
+    vectorized over the whole lattice, not evaluated cell-by-cell) and must
+    be traceable by ``jax.vmap``/``jit`` — static Python branching on cell
+    *structure* only, never on array values.
+    """
+
+    freq: float
+
+    @property
+    def family(self) -> str: ...
+
+    @property
+    def label(self) -> str: ...
+
+
 @dataclasses.dataclass(frozen=True)
 class WorkloadCell:
+    """The paper's original cell: one stencil at one problem size."""
+
     stencil: StencilSpec
     size: ProblemSize
     freq: float  # fr(c) * fr(c, Sz), already combined
+
+    @property
+    def family(self) -> str:
+        return "stencil"
+
+    @property
+    def label(self) -> str:
+        return self.stencil.name
 
 
 @dataclasses.dataclass(frozen=True)
 class Workload:
     """A frequency-weighted set of cells; eq. (17)'s objective is
-    ``sum_cell freq * min_tiles T_alg(cell)`` (separability, eq. (18))."""
+    ``sum_cell freq * min_tiles T_alg(cell)`` (separability, eq. (18)).
+
+    All cells must share one ``family`` — the sweep engines vectorize over
+    homogeneous lattices, so a mixed workload has no single design space.
+    """
 
     name: str
     cells: Tuple[WorkloadCell, ...]
@@ -47,6 +93,17 @@ class Workload:
         total = sum(c.freq for c in self.cells)
         if not 0.999 <= total <= 1.001:
             raise ValueError(f"cell frequencies sum to {total}, expected 1")
+        families = {getattr(c, "family", "stencil") for c in self.cells}
+        if len(families) > 1:
+            raise ValueError(f"mixed cell families in one workload: {sorted(families)}")
+
+    @property
+    def family(self) -> str:
+        """Cell family ("stencil" for the paper's suite, "lm" for op-graph
+        cells); drives the ``codesign()`` dispatch and artifact routing."""
+        if not self.cells:
+            return "stencil"
+        return getattr(self.cells[0], "family", "stencil")
 
     @property
     def stencils(self) -> List[StencilSpec]:

@@ -23,6 +23,13 @@ already per-chip).
 Also reported per cell: dominant term, MODEL_FLOPS = 6*N(_active)*D (2*N*D
 for inference shapes), useful-compute ratio MODEL_FLOPS/HLO_FLOPs, and a
 one-line lever for the dominant term.
+
+This module reads *compiled* HLO counters; its analytic twin is
+``repro.core.lmtime.lm_roofline``, which predicts the same three terms
+from closed-form traffic formulas (and whose ``HW`` table extends the one
+below with DCI constants for cross-pod meshes). The LM codesign sweep
+(``repro.core.lmcells``) vectorizes those formulas over whole mesh-plan
+lattices.
 """
 
 from __future__ import annotations

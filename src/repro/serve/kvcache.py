@@ -69,10 +69,15 @@ def init_caches(
     dtype=None,
     include_enc: bool = False,
 ) -> Dict:
-    """Build the full cache pytree for ``forward``.
+    """Build the full cache pytree for ``forward``, zero-initialized.
 
-    ``include_enc=False`` (prefill): the enc-dec encoder output is not yet
-    known; forward computes it and adds 'enc_out' + cross K/V.
+    The tree mirrors the model's segment/slot structure: one ``seg{i}``
+    entry per ``segments(cfg)`` group, each a tuple of per-slot dicts
+    stacked over the segment's repeat count (``lax.scan`` xs layout).
+    ``max_len`` bounds the ring buffers in *tokens* (SWA blocks clamp it
+    to their window). ``include_enc=False`` (prefill): the enc-dec
+    encoder output is not yet known; forward computes it and adds
+    'enc_out' + cross K/V.
     """
     dtype = dtype or jnp.dtype(cfg.dtype)
     stack: Dict = {}
@@ -97,7 +102,16 @@ def init_caches(
 
 
 def cache_bytes(cfg: ArchConfig, batch: int, max_len: int) -> int:
-    """Analytic cache footprint (for the roofline / serving planner)."""
+    """Analytic cache footprint in bytes, without allocating anything.
+
+    Builds the exact cache pytree under ``jax.eval_shape`` (abstract
+    values only) and sums ``prod(shape) * itemsize`` over the leaves, so
+    it is always consistent with what :func:`init_caches` would really
+    allocate -- MLA latents, SWA windows, SSD constant state and enc-dec
+    cross K/V included. Consumers: the serving planner, the analytic
+    roofline (``repro.core.lmtime.lm_roofline``'s decode KV traffic), and
+    the LM codesign decode cells (``repro.core.lmcells``), which bake
+    this number into their per-cell constants."""
     import math
 
     caches = jax.eval_shape(

@@ -26,6 +26,7 @@ paper §V.B). This package turns that observation into a serving system:
 from .client import GatewayClient  # noqa: F401
 from .gateway import (  # noqa: F401
     AmbiguousRouteError,
+    AmbiguousWorkloadError,
     Gateway,
     GatewayError,
     GatewayHTTPServer,
@@ -34,7 +35,7 @@ from .gateway import (  # noqa: F401
     serve_http,
 )
 from .query import QueryEngine, QueryRequest, QueryResponse  # noqa: F401
-from .server import CodesignServer  # noqa: F401
+from .server import CodesignServer, LMServer, server_from_artifact  # noqa: F401
 from .store import (  # noqa: F401
     KINDS,
     Artifact,

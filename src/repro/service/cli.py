@@ -10,11 +10,20 @@ call -- any frequency mix, budget, what-if -- is a warm re-reduction):
     python -m repro.service.cli build --gpu titanx       # second GPU target
     python -m repro.service.cli ls
 
+LM workloads (op-graph cells over mesh plans; see docs/lm_codesign.md --
+area IS the chip count, so --max-area is a chip budget):
+
+    python -m repro.service.cli build --workload lm --chips 256
+    python -m repro.service.cli query --workload lm \\
+        --freq llama3-8b:decode=1 --max-area 64 --top-k 3
+
 Fleet serving (gateway over every stored artifact; see docs/serving.md):
 
     python -m repro.service.cli serve --port 8932
     python -m repro.service.cli query --url http://127.0.0.1:8932 \\
         --gpu titanx --stencil heat2d --max-area 450
+    python -m repro.service.cli query --url http://127.0.0.1:8932 \\
+        --gpu tpu_v5e --workload lm --freq llama3-8b:decode=1
 
 The store location is ``--store``, else ``$REPRO_STORE``, else
 ``~/.cache/repro/codesign-store``.
@@ -75,9 +84,23 @@ def _add_server_args(p: argparse.ArgumentParser) -> None:
     p.add_argument("--store", default=DEFAULT_STORE, help="artifact store directory")
     p.add_argument("--gpu", default=None,
                    help=f"GPU target constants, one of {_gpu_names()} "
-                        "(default gtx980); with --url, the routing selector "
-                        "instead -- any served name, incl. calibrated ones "
-                        "like 'gtx980-cal'")
+                        "(default gtx980); with --workload lm, the accelerator "
+                        "name stamped on the artifact (default tpu_v5e); with "
+                        "--url, the routing selector instead -- any served "
+                        "name, incl. calibrated ones like 'gtx980-cal'")
+    p.add_argument("--workload", default=None, metavar="FAMILY",
+                   help="cell family to build/query: 'lm' sweeps LM op-graph "
+                        "cells over mesh plans (docs/lm_codesign.md); default "
+                        "is the paper's stencil workload. With --url, the "
+                        "workload-name routing selector")
+    p.add_argument("--arch", action="append", metavar="NAME",
+                   help="with --workload lm: model config to include, e.g. "
+                        "llama3-8b (repeatable; default llama3-8b + "
+                        "mixtral-8x22b)")
+    p.add_argument("--chips", type=int, default=512,
+                   help="with --workload lm: chip budget bounding the mesh "
+                        "factorization space (default 512, the smallest "
+                        "budget where every default cell fits)")
     p.add_argument("--max-hw-area", type=float, default=650.0,
                    help="hardware-space enumeration budget (mm^2)")
     p.add_argument("--downsample", type=int, default=1,
@@ -91,7 +114,33 @@ def _add_server_args(p: argparse.ArgumentParser) -> None:
     )
 
 
-def _server(args) -> CodesignServer:
+def _server(args):
+    """In-process server for the requested cell family (the --url path
+    never gets here; there the flags become routing selectors)."""
+    if args.workload is not None and args.workload != "lm":
+        raise _die(
+            f"in-process --workload supports 'lm' (got {args.workload!r}); "
+            "other workload names are routing selectors for --url queries"
+        )
+    if args.workload != "lm" and (args.arch or args.chips != 512):
+        raise _die("--arch/--chips only apply to --workload lm")
+    if args.workload == "lm":
+        from repro.core.lmcells import LM_GPU_NAME, lm_workload
+
+        from .server import LMServer
+
+        kw = {}
+        if args.arch:
+            kw["workload"] = lm_workload(archs=tuple(args.arch))
+        return LMServer(
+            ArtifactStore(args.store),
+            max_chips=args.chips,
+            downsample=args.downsample,
+            engine=args.engine,
+            gpu_name=args.gpu or LM_GPU_NAME,
+            batch_window=0.0,
+            **kw,
+        )
     return CodesignServer(
         ArtifactStore(args.store),
         gpu=_gpu(args.gpu or "gtx980"),
@@ -133,11 +182,23 @@ def _print_response(resp, out, total_hw=None) -> None:
         print("no design satisfies the requested constraints "
               "(budget/fix select an empty subspace)")
         return
-    print(f"best:  n_SM={b['n_sm']:3d} n_V={b['n_v']:4d} M_SM={b['m_sm']:4.0f}kB "
-          f"area={b['area']:6.1f}mm^2  {b['gflops']:8.1f} GFLOP/s")
-    for r in resp.top_k[1:]:
-        print(f"       n_SM={r['n_sm']:3d} n_V={r['n_v']:4d} M_SM={r['m_sm']:4.0f}kB "
-              f"area={r['area']:6.1f}mm^2  {r['gflops']:8.1f} GFLOP/s")
+    if "n_sm" in b:  # stencil sweeps keep the paper's design-point layout
+        print(f"best:  n_SM={b['n_sm']:3d} n_V={b['n_v']:4d} M_SM={b['m_sm']:4.0f}kB "
+              f"area={b['area']:6.1f}mm^2  {b['gflops']:8.1f} GFLOP/s")
+        for r in resp.top_k[1:]:
+            print(f"       n_SM={r['n_sm']:3d} n_V={r['n_v']:4d} M_SM={r['m_sm']:4.0f}kB "
+                  f"area={r['area']:6.1f}mm^2  {r['gflops']:8.1f} GFLOP/s")
+    else:  # generic design points (LM: pod/data/model/chips)
+        def _row(point):
+            pairs = " ".join(
+                f"{k}={point[k]:g}" for k in point
+                if k not in ("index", "gflops", "weighted_time")
+            )
+            return f"{pairs}  {point['gflops']:10.1f} GFLOP/s"
+
+        print(f"best:  {_row({**resp.best_point, 'gflops': b['gflops']})}")
+        for r in resp.top_k[1:]:
+            print(f"       {_row(r)}")
     if "pareto" in out:
         of = f" of {total_hw}" if total_hw else ""
         print(f"pareto front: {out['pareto']['count']}{of} designs")
@@ -182,6 +243,7 @@ def cmd_query_batch(args) -> None:
     superseded = {
         "--stencil": args.stencil, "--freq": args.freq, "--fix": args.fix,
         "--artifact": args.artifact, "--gpu": args.gpu,
+        "--workload": args.workload, "--arch": args.arch,
         "--pareto": args.pareto or None,
         "--max-area": None if args.max_area == np.inf else args.max_area,
         "--min-area": args.min_area or None,
@@ -241,8 +303,13 @@ def cmd_query(args) -> None:
 
         client = GatewayClient(args.url)
         route = None
-        if args.artifact is None and args.gpu is not None:
-            route = {"gpu": args.gpu}
+        if args.artifact is None:
+            route = {}
+            if args.gpu is not None:
+                route["gpu"] = args.gpu
+            if args.workload is not None:
+                route["workload"] = args.workload
+            route = route or None
         t0 = time.perf_counter()
         try:
             resp = client.query(req, artifact=args.artifact, route=route)
@@ -295,10 +362,11 @@ def cmd_build(args) -> None:
     srv = _server(args)
     t0 = time.perf_counter()
     srv.ensure_artifact()
+    gpu_name = srv.gpu_name if hasattr(srv, "gpu_name") else srv.gpu.name
     print(f"artifact {srv.key}: "
           f"{'already stored' if srv.stats['artifact_loads'] else 'built'} "
           f"({time.perf_counter()-t0:.1f}s, {len(srv.hw)} hw points, "
-          f"{len(srv.workload.cells)} cells, gpu={srv.gpu.name})")
+          f"{len(srv.workload.cells)} cells, gpu={gpu_name})")
 
 
 def cmd_ls(args) -> None:
@@ -313,6 +381,13 @@ def cmd_ls(args) -> None:
             print(f"{r['key']}  v{r['format_version']}  kind={kind}  "
                   + " ".join(f"{k}={v}" for k, v in sorted(r.items())
                              if k not in ("key", "format_version", "kind")))
+            continue
+        if r.get("family", "stencil") == "lm":
+            groups = ",".join(r.get("models") or []) or "?"
+            ops = ",".join(r.get("ops") or [])
+            print(f"{r['key']}  v{r['format_version']}  {r['workload']:16s} "
+                  f"gpu={r['gpu']:8s} {r['cells']:4d} cells x {r['hw']:6d} hw  "
+                  f"engine={r['engine']}  lm[{groups}: {ops}]")
             continue
         print(f"{r['key']}  v{r['format_version']}  {r['workload']:16s} "
               f"gpu={r['gpu']:8s} {r['cells']:4d} cells x {r['hw']:6d} hw  "
@@ -373,8 +448,9 @@ def cmd_serve(args) -> None:
             print(f"  {row['key']}  kind={row['kind']}  "
                   f"gpu={row.get('gpu', '?')}")
             continue
+        cells = row.get("stencils") or row.get("models") or []
         print(f"  {row['key']}  gpu={row['gpu']}  {row['cells']}x{row['hw']}  "
-              f"[{','.join(row['stencils'])}]")
+              f"[{','.join(cells)}]")
     # machine-parseable last line: the smoke lane reads the bound port here
     print(f"serving on http://{host}:{port}", flush=True)
     try:
@@ -403,11 +479,13 @@ def main(argv=None) -> None:
                    help="with --url: JSON array of {artifact?, route?, request} "
                         "objects sent as ONE /v1/query_many round trip")
     q.add_argument("--stencil", action="append",
-                   help="stencil to weight 1.0 (repeatable)")
+                   help="cell group to weight 1.0 (repeatable): a stencil "
+                        "name, or for LM artifacts a model, op, or model:op")
     q.add_argument("--freq", action="append", metavar="NAME=W",
-                   help="explicit stencil weight (repeatable)")
+                   help="explicit cell-group weight (repeatable)")
     q.add_argument("--max-area", type=float, default=np.inf,
-                   help="area budget for the answer (mm^2)")
+                   help="area budget for the answer (mm^2; for LM sweeps "
+                        "area IS the chip count, so this is a chip budget)")
     q.add_argument("--min-area", type=float, default=0.0)
     q.add_argument("--top-k", type=int, default=1)
     q.add_argument("--pareto", action="store_true", help="include the Pareto front")

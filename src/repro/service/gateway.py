@@ -19,8 +19,10 @@ through a single long-lived endpoint. The gateway closes that gap:
   before failing, so artifacts dropped into the store after startup are
   served without a restart;
 * **LRU server pool** -- each routed key gets a lazily-instantiated
-  per-artifact :class:`CodesignServer`
-  (:meth:`~repro.service.server.CodesignServer.from_artifact`), kept in an
+  per-artifact server for its cell family
+  (:func:`~repro.service.server.server_from_artifact`: a
+  :class:`CodesignServer` for stencil sweeps, an
+  :class:`~repro.service.server.LMServer` for LM sweeps), kept in an
   LRU bounded by ``pool_size``: hundreds of stored artifacts never mean
   hundreds of resident mmaps/LRUs. Evicted servers finish their in-flight
   queries (the query path holds a reference) and are garbage-collected;
@@ -48,7 +50,7 @@ from typing import Any, Dict, List, Mapping, Optional, Sequence, Tuple, Union
 
 from . import wire
 from .query import QueryRequest, QueryResponse
-from .server import CodesignServer
+from .server import CodesignServer, server_from_artifact
 from .store import ArtifactStore
 
 __all__ = [
@@ -56,20 +58,28 @@ __all__ = [
     "GatewayError",
     "UnknownArtifactError",
     "AmbiguousRouteError",
+    "AmbiguousWorkloadError",
     "WrongArtifactKindError",
     "GatewayHTTPServer",
     "serve_http",
 ]
 
-#: selector names :meth:`Gateway.resolve` understands. ``stencils`` is a
-#: subset match (the artifact must serve at least those stencils); the
-#: rest are exact equality against the routing row. ``kind`` widens the
-#: search beyond sweep artifacts (measurement/calibration manifests);
-#: ``calibration`` selects the sweep built from a given calibration key.
+#: selector names :meth:`Gateway.resolve` understands. ``stencils``,
+#: ``models`` and ``ops`` are subset matches (the artifact must serve at
+#: least those stencils / LM models / LM ops); the rest are exact equality
+#: against the routing row. ``workload`` matches the workload name (LM
+#: sweeps are built as workload ``"lm"`` by default, so ``{"workload":
+#: "lm"}`` is the LM disambiguator); ``family`` matches the cell family
+#: ("stencil" | "lm"). ``kind`` widens the search beyond sweep artifacts
+#: (measurement/calibration manifests); ``calibration`` selects the sweep
+#: built from a given calibration key.
 ROUTE_SELECTORS = (
-    "key", "gpu", "workload", "stencils", "engine", "hw_digest", "kind",
-    "calibration",
+    "key", "gpu", "workload", "family", "stencils", "models", "ops",
+    "engine", "hw_digest", "kind", "calibration",
 )
+
+#: selectors matched as subsets rather than exact equality.
+_SUBSET_SELECTORS = ("stencils", "models", "ops")
 
 
 class GatewayError(Exception):
@@ -96,6 +106,18 @@ class AmbiguousRouteError(GatewayError):
 
     code = "ambiguous_route"
     http_status = wire.ERROR_HTTP_STATUS["ambiguous_route"]
+
+
+class AmbiguousWorkloadError(GatewayError):
+    """A routing selector matched artifacts of more than one *cell family*
+    (e.g. a stencil sweep and an LM sweep stored for the same GPU name).
+    Unlike a same-family :class:`AmbiguousRouteError` (HTTP 409, "pin a
+    key"), the request is underspecified about what kind of question it is
+    asking -- add a ``workload`` or ``family`` selector -- so it classifies
+    as the caller's error (HTTP 400), mirroring ``wrong_artifact_kind``."""
+
+    code = "ambiguous_workload"
+    http_status = wire.ERROR_HTTP_STATUS["ambiguous_workload"]
 
 
 class WrongArtifactKindError(GatewayError):
@@ -212,9 +234,11 @@ class Gateway:
             ok = kinds is None or row.get("kind", "sweep") in kinds
             if ok:
                 for name, want in route.items():
-                    if name == "stencils":
+                    if name in _SUBSET_SELECTORS:
                         want_set = {want} if isinstance(want, str) else set(want)
-                        ok = want_set <= set(row.get("stencils") or ())
+                        ok = want_set <= set(row.get(name) or ())
+                    elif name == "family":
+                        ok = row.get("family", "stencil") == want
                     else:
                         ok = row.get(name) == want
                     if not ok:
@@ -274,6 +298,20 @@ class Gateway:
                         self.stats["routed_by_selector"] += 1
                     return matches[0]
                 if len(matches) > 1:
+                    with self._mu:
+                        families = {
+                            self._index[k].get("family", "stencil")
+                            for k in matches
+                            if k in self._index
+                        }
+                    if len(families) > 1:
+                        raise AmbiguousWorkloadError(
+                            f"route {dict(route)} matches artifacts of "
+                            f"{len(families)} cell families "
+                            f"({', '.join(sorted(families))}); add a "
+                            f"'workload' or 'family' selector to say which "
+                            f"kind of question this is"
+                        )
                     raise AmbiguousRouteError(
                         f"route {dict(route)} matches {len(matches)} artifacts "
                         f"({', '.join(sorted(matches))}); pin one with 'artifact'"
@@ -336,7 +374,7 @@ class Gateway:
         if art is None:  # deleted between index and query
             self.refresh()
             raise UnknownArtifactError(f"artifact {key!r} vanished from {store.root}")
-        srv = CodesignServer.from_artifact(
+        srv = server_from_artifact(
             store, art, batch_window=self.batch_window, lru_size=self.lru_size
         )
         with self._mu:

@@ -35,9 +35,11 @@ __all__ = ["QueryRequest", "QueryResponse", "QueryEngine"]
 class QueryRequest:
     """One codesign question against a stored artifact.
 
-    ``freqs`` weights whole stencils (unnormalized; redistributed over each
-    stencil's stored size grid proportionally to the artifact's cell
-    frequencies); ``cell_freqs`` overrides with an explicit per-cell vector.
+    ``freqs`` weights whole cell groups (unnormalized; redistributed over
+    each group's stored cells proportionally to the artifact's cell
+    frequencies). Group names are stencil names for stencil artifacts; LM
+    artifacts accept a model name, an op name, or an exact ``model:op``
+    label. ``cell_freqs`` overrides with an explicit per-cell vector.
     Leaving both None asks about the artifact's own workload mix.
     ``fix`` is the what-if subspace: only hardware points whose named
     design parameters equal the given values compete (e.g.
@@ -132,10 +134,18 @@ class QueryEngine:
         self.artifact = artifact
         self._flops = artifact.cell_flops()
         self._default_freqs = artifact.cell_freqs()
-        # per-stencil cell index lists, in artifact cell order
-        self._stencil_cells: Dict[str, List[int]] = {}
+        # per-group cell index lists, in artifact cell order. Stencil
+        # artifacts group by stencil name; LM artifacts register three
+        # overlapping aliases per cell -- model ("llama3-8b"), op
+        # ("decode"), and the exact "model:op" label -- so mixes can be
+        # stated at whichever granularity the caller thinks in.
+        self._group_cells: Dict[str, List[int]] = {}
         for i, c in enumerate(artifact.manifest["workload"]["cells"]):
-            self._stencil_cells.setdefault(c["stencil"]["name"], []).append(i)
+            if artifact.family == "lm":
+                for alias in (c["model"], c["op"], f"{c['model']}:{c['op']}"):
+                    self._group_cells.setdefault(alias, []).append(i)
+            else:
+                self._group_cells.setdefault(c["stencil"]["name"], []).append(i)
         self.lru = _LRU(lru_size)
 
     # ---- frequency resolution --------------------------------------------
@@ -149,11 +159,11 @@ class QueryEngine:
         elif req.freqs is not None:
             f = np.zeros(c, np.float64)
             for name, w in req.freqs.items():
-                cells = self._stencil_cells.get(name)
+                cells = self._group_cells.get(name)
                 if cells is None:
                     raise KeyError(
-                        f"stencil {name!r} not in artifact "
-                        f"(has {sorted(self._stencil_cells)})"
+                        f"cell group {name!r} not in artifact "
+                        f"(has {sorted(self._group_cells)})"
                     )
                 base = self._default_freqs[cells]
                 f[cells] = float(w) * base / base.sum()

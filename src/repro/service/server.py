@@ -1,4 +1,4 @@
-"""Thread-safe in-process codesign query server.
+"""Thread-safe in-process codesign query servers.
 
 Decouples the expensive eq.-18 sweep (producer) from cheap workload
 queries (consumers):
@@ -6,18 +6,22 @@ queries (consumers):
 * **warm path**: the configured sweep's artifact is on disk -- queries are
   answered by :class:`repro.service.query.QueryEngine` re-reductions and
   NEVER invoke a sweep engine;
-* **miss path**: first touch runs ``codesign()`` once (under a build lock,
-  so a thundering herd compiles/solves exactly once) and writes the
+* **miss path**: first touch runs the family's sweep once (under a build
+  lock, so a thundering herd compiles/solves exactly once) and writes the
   artifact through the store for every later process;
 * **microbatching**: concurrent ``query()`` callers rendezvous for a short
   window; the leader stacks every pending frequency vector into one
   ``(B, cells) @ (cells, hw)`` matmul and distributes the rows. Amortizes
   memory traffic over the big matrix exactly like batched inference.
 
-One server serves one configured sweep. The fleet front-end over *many*
-stored sweeps is :class:`repro.service.gateway.Gateway`, which constructs
-its pooled servers via :meth:`CodesignServer.from_artifact` (warm-only;
-the miss path is unreachable).
+One server serves one configured sweep. There is one server class per cell
+family -- :class:`CodesignServer` (stencils) and :class:`LMServer` (LM
+op-graph cells) -- sharing the serving machinery of :class:`_BaseServer`;
+:func:`server_from_artifact` dispatches a discovered artifact to the right
+class by its manifest family. The fleet front-end over *many* stored
+sweeps is :class:`repro.service.gateway.Gateway`, which constructs its
+pooled servers via that dispatcher (warm-only; the miss path is
+unreachable).
 """
 
 from __future__ import annotations
@@ -35,6 +39,13 @@ from repro.core.codesign import (
     codesign,
     enumerate_hw_space,
 )
+from repro.core.lmcells import (
+    LM_GPU_NAME,
+    LMCodesignResult,
+    LMHardwareSpace,
+    enumerate_lm_hw_space,
+    lm_codesign,
+)
 from repro.core.solver import LATTICE_2D, LATTICE_3D, TileLattice
 from repro.core.timemodel import GPUSpec, MAXWELL_GPU
 from repro.core.workload import Workload, paper_workload
@@ -42,7 +53,7 @@ from repro.core.workload import Workload, paper_workload
 from .query import QueryEngine, QueryRequest, QueryResponse
 from .store import Artifact, ArtifactStore
 
-__all__ = ["CodesignServer"]
+__all__ = ["CodesignServer", "LMServer", "server_from_artifact"]
 
 
 class _Slot:
@@ -55,67 +66,22 @@ class _Slot:
         self.error: Optional[BaseException] = None
 
 
-class CodesignServer:
-    """Serve codesign queries for one configured sweep.
+class _BaseServer:
+    """Family-agnostic serving machinery: artifact lifecycle (get-or-build
+    under the cross-process lock) and leader/follower query microbatching.
 
-    ``batch_window`` is the rendezvous time (seconds) the microbatch leader
-    waits for followers; 0 disables batching (every query answers solo,
-    still thread-safe). The default workload is the paper's Fig.-3
-    six-stencil uniform mix; ``downsample`` thins the hardware space for
-    demos/CI. ``engine``/``devices`` pick the sweep engine for the miss
-    path (``"sharded"`` partitions the hardware axis over a device mesh);
-    the content address canonicalizes bit-identical engines, so an
-    artifact built sharded on an 8-device host warms a single-device
-    ``engine="jax"`` server and vice versa.
-    """
+    Subclasses set ``self.key`` (the content address, known BEFORE any
+    sweep -- that is what makes the warm path engine-free) in their
+    ``__init__`` after calling :meth:`_init_serving`, and implement
+    :meth:`_solve` (run the family's sweep, persist it, return the
+    artifact)."""
 
-    def __init__(
-        self,
-        store: ArtifactStore,
-        workload: Optional[Workload] = None,
-        gpu: GPUSpec = MAXWELL_GPU,
-        area_model: LinearAreaModel = MAXWELL,
-        max_area: float = 650.0,
-        hw: Optional[HardwareSpace] = None,
-        downsample: int = 1,
-        engine: str = "auto",
-        chunk: Optional[int] = None,
-        devices=None,
-        lattice_2d: TileLattice = LATTICE_2D,
-        lattice_3d: TileLattice = LATTICE_3D,
-        batch_window: float = 0.002,
-        lru_size: int = 256,
-    ):
+    def _init_serving(
+        self, store: ArtifactStore, batch_window: float, lru_size: int
+    ) -> None:
         self.store = store
-        self.workload = workload or paper_workload()
-        self.gpu = gpu
-        self.chunk = chunk
-        self.devices = devices
-        self.lattice_2d = lattice_2d
-        self.lattice_3d = lattice_3d
         self.batch_window = float(batch_window)
         self.lru_size = lru_size
-        if hw is None:
-            hw = enumerate_hw_space(area_model, max_area=max_area)
-            if downsample > 1:
-                hw = hw.downsample(downsample)
-        self.hw = hw
-        # apply the devices= promotion ONCE (auto -> sharded, non-mesh
-        # engines rejected), so the key below, the miss-path build, and
-        # the persisted artifact can never disagree about which matrix
-        # family they name. Full auto resolution stays lazy: it needs
-        # device_count(), which would initialize the jax backend on warm
-        # paths that never sweep (the digest resolves the remaining
-        # "auto" to its matrix family without touching a backend).
-        from repro.core.codesign import _devices_engine
-
-        engine = _devices_engine(engine, devices)
-        self.engine = engine
-        #: the artifact identity is known BEFORE any sweep runs -- that is
-        #: what makes the warm path engine-free.
-        self.key = store.key_for(
-            self.workload, gpu, self.hw, engine, lattice_2d, lattice_3d
-        )
         self._engine: Optional[QueryEngine] = None
         self._build_mu = threading.Lock()
         self._batch_mu = threading.Lock()
@@ -129,69 +95,8 @@ class CodesignServer:
             "artifact_loads": 0,
         }
 
-    @classmethod
-    def from_artifact(
-        cls,
-        store: ArtifactStore,
-        artifact: Artifact,
-        batch_window: float = 0.002,
-        lru_size: int = 256,
-    ) -> "CodesignServer":
-        """Wrap an already-stored artifact as a warm server (never sweeps).
-
-        This is the gateway's constructor: a discovered artifact's manifest
-        is parsed back into the server's configuration (workload, GPU,
-        hardware space, lattices, resolved engine family), the content
-        address is recomputed and checked against the artifact's own key --
-        a mismatch means the manifest does not describe the matrix and the
-        artifact must not be served -- and the query engine is pre-seeded,
-        so the miss path is unreachable. Only the small npz hardware
-        columns are materialized here; the ``(C, H)`` matrix stays an
-        untouched mmap until the first query needs a row.
-        """
-        m = artifact.manifest
-        workload, gpu, lattices = CodesignResult.parse_manifest(m)
-        # the spec records the exact (2d, 3d) lattice pair the key was
-        # digested over -- including a lattice for a dimensionality the
-        # workload never used, which the per-cell tables cannot recover
-        spec_lat = m.get("spec", {}).get("lattices")
-        if spec_lat:
-            lat2, lat3 = (
-                TileLattice(**{k: tuple(int(x) for x in v) for k, v in spec_lat[d].items()})
-                for d in ("2d", "3d")
-            )
-        else:  # pre-spec manifests: per-cell tables + defaults
-            lat2 = next((lat for lat in lattices if len(lat.t_s3) == 1), LATTICE_2D)
-            lat3 = next((lat for lat in lattices if len(lat.t_s3) > 1), LATTICE_3D)
-        hw = HardwareSpace(
-            n_sm=np.asarray(artifact.hw_n_sm, np.float64),
-            n_v=np.asarray(artifact.hw_n_v, np.float64),
-            m_sm=np.asarray(artifact.hw_m_sm, np.float64),
-            area=np.asarray(artifact.hw_area, np.float64),
-        )
-        # the spec's engine is already the resolved matrix *family*
-        # ("jax"/"numpy"), so the recomputed key cannot drift with the
-        # loading host's device count or jax availability.
-        engine = m.get("spec", {}).get("engine") or m.get("engine", "auto")
-        srv = cls(
-            store,
-            workload=workload,
-            gpu=gpu,
-            hw=hw,
-            engine=engine,
-            lattice_2d=lat2,
-            lattice_3d=lat3,
-            batch_window=batch_window,
-            lru_size=lru_size,
-        )
-        if srv.key != artifact.key:
-            raise ValueError(
-                f"artifact {artifact.key} does not reproduce its own content "
-                f"address (got {srv.key}); refusing to serve it"
-            )
-        srv._engine = QueryEngine(artifact, lru_size=lru_size)
-        srv.stats["artifact_loads"] += 1
-        return srv
+    def _solve(self) -> Artifact:
+        raise NotImplementedError
 
     # ---- artifact lifecycle ----------------------------------------------
     def ensure_artifact(self) -> QueryEngine:
@@ -206,27 +111,12 @@ class CodesignServer:
                     # cross-process dedup: a second process racing to the
                     # same key blocks here, then finds the winner's
                     # artifact on the re-check instead of re-sweeping
-                    # (build_lock is reentrant, so store.put below can
-                    # re-acquire it around the staged write).
+                    # (build_lock is reentrant, so store.put inside _solve
+                    # can re-acquire it around the staged write).
                     with self.store.build_lock(self.key):
                         art = self.store.get(self.key)
                         if art is None:
-                            result = codesign(
-                                self.workload,
-                                gpu=self.gpu,
-                                hw=self.hw,
-                                lattice_2d=self.lattice_2d,
-                                lattice_3d=self.lattice_3d,
-                                chunk=self.chunk,
-                                engine=self.engine,
-                                devices=self.devices,
-                            )
-                            art = self.store.put(
-                                result,
-                                engine=self.engine,
-                                lattice_2d=self.lattice_2d,
-                                lattice_3d=self.lattice_3d,
-                            )
+                            art = self._solve()
                             assert art.key == self.key, (
                                 "store key drifted from server key"
                             )
@@ -300,3 +190,244 @@ class CodesignServer:
             self.stats["batches"] += 1
             self.stats["max_batch"] = max(self.stats["max_batch"], len(requests))
         return engine.answer_many(list(requests))
+
+
+class CodesignServer(_BaseServer):
+    """Serve codesign queries for one configured stencil sweep.
+
+    ``batch_window`` is the rendezvous time (seconds) the microbatch leader
+    waits for followers; 0 disables batching (every query answers solo,
+    still thread-safe). The default workload is the paper's Fig.-3
+    six-stencil uniform mix; ``downsample`` thins the hardware space for
+    demos/CI. ``engine``/``devices`` pick the sweep engine for the miss
+    path (``"sharded"`` partitions the hardware axis over a device mesh);
+    the content address canonicalizes bit-identical engines, so an
+    artifact built sharded on an 8-device host warms a single-device
+    ``engine="jax"`` server and vice versa.
+    """
+
+    def __init__(
+        self,
+        store: ArtifactStore,
+        workload: Optional[Workload] = None,
+        gpu: GPUSpec = MAXWELL_GPU,
+        area_model: LinearAreaModel = MAXWELL,
+        max_area: float = 650.0,
+        hw: Optional[HardwareSpace] = None,
+        downsample: int = 1,
+        engine: str = "auto",
+        chunk: Optional[int] = None,
+        devices=None,
+        lattice_2d: TileLattice = LATTICE_2D,
+        lattice_3d: TileLattice = LATTICE_3D,
+        batch_window: float = 0.002,
+        lru_size: int = 256,
+    ):
+        self._init_serving(store, batch_window, lru_size)
+        self.workload = workload or paper_workload()
+        self.gpu = gpu
+        self.chunk = chunk
+        self.devices = devices
+        self.lattice_2d = lattice_2d
+        self.lattice_3d = lattice_3d
+        if hw is None:
+            hw = enumerate_hw_space(area_model, max_area=max_area)
+            if downsample > 1:
+                hw = hw.downsample(downsample)
+        self.hw = hw
+        # apply the devices= promotion ONCE (auto -> sharded, non-mesh
+        # engines rejected), so the key below, the miss-path build, and
+        # the persisted artifact can never disagree about which matrix
+        # family they name. Full auto resolution stays lazy: it needs
+        # device_count(), which would initialize the jax backend on warm
+        # paths that never sweep (the digest resolves the remaining
+        # "auto" to its matrix family without touching a backend).
+        from repro.core.codesign import _devices_engine
+
+        engine = _devices_engine(engine, devices)
+        self.engine = engine
+        self.key = store.key_for(
+            self.workload, gpu, self.hw, engine, lattice_2d, lattice_3d
+        )
+
+    def _solve(self) -> Artifact:
+        result = codesign(
+            self.workload,
+            gpu=self.gpu,
+            hw=self.hw,
+            lattice_2d=self.lattice_2d,
+            lattice_3d=self.lattice_3d,
+            chunk=self.chunk,
+            engine=self.engine,
+            devices=self.devices,
+        )
+        return self.store.put(
+            result,
+            engine=self.engine,
+            lattice_2d=self.lattice_2d,
+            lattice_3d=self.lattice_3d,
+        )
+
+    @classmethod
+    def from_artifact(
+        cls,
+        store: ArtifactStore,
+        artifact: Artifact,
+        batch_window: float = 0.002,
+        lru_size: int = 256,
+    ) -> "CodesignServer":
+        """Wrap an already-stored artifact as a warm server (never sweeps).
+
+        This is the gateway's constructor: a discovered artifact's manifest
+        is parsed back into the server's configuration (workload, GPU,
+        hardware space, lattices, resolved engine family), the content
+        address is recomputed and checked against the artifact's own key --
+        a mismatch means the manifest does not describe the matrix and the
+        artifact must not be served -- and the query engine is pre-seeded,
+        so the miss path is unreachable. Only the small npz hardware
+        columns are materialized here; the ``(C, H)`` matrix stays an
+        untouched mmap until the first query needs a row.
+        """
+        m = artifact.manifest
+        workload, gpu, lattices = CodesignResult.parse_manifest(m)
+        # the spec records the exact (2d, 3d) lattice pair the key was
+        # digested over -- including a lattice for a dimensionality the
+        # workload never used, which the per-cell tables cannot recover
+        spec_lat = m.get("spec", {}).get("lattices")
+        if spec_lat:
+            lat2, lat3 = (
+                TileLattice(**{k: tuple(int(x) for x in v) for k, v in spec_lat[d].items()})
+                for d in ("2d", "3d")
+            )
+        else:  # pre-spec manifests: per-cell tables + defaults
+            lat2 = next((lat for lat in lattices if len(lat.t_s3) == 1), LATTICE_2D)
+            lat3 = next((lat for lat in lattices if len(lat.t_s3) > 1), LATTICE_3D)
+        hw = HardwareSpace(
+            n_sm=np.asarray(artifact.hw_n_sm, np.float64),
+            n_v=np.asarray(artifact.hw_n_v, np.float64),
+            m_sm=np.asarray(artifact.hw_m_sm, np.float64),
+            area=np.asarray(artifact.hw_area, np.float64),
+        )
+        # the spec's engine is already the resolved matrix *family*
+        # ("jax"/"numpy"), so the recomputed key cannot drift with the
+        # loading host's device count or jax availability.
+        engine = m.get("spec", {}).get("engine") or m.get("engine", "auto")
+        srv = cls(
+            store,
+            workload=workload,
+            gpu=gpu,
+            hw=hw,
+            engine=engine,
+            lattice_2d=lat2,
+            lattice_3d=lat3,
+            batch_window=batch_window,
+            lru_size=lru_size,
+        )
+        if srv.key != artifact.key:
+            raise ValueError(
+                f"artifact {artifact.key} does not reproduce its own content "
+                f"address (got {srv.key}); refusing to serve it"
+            )
+        srv._engine = QueryEngine(artifact, lru_size=lru_size)
+        srv.stats["artifact_loads"] += 1
+        return srv
+
+
+class LMServer(_BaseServer):
+    """Serve codesign queries for one configured LM-family sweep.
+
+    Same serving machinery and guarantees as :class:`CodesignServer`; the
+    configured sweep is :func:`repro.core.lmcells.lm_codesign` over mesh
+    factorizations of ``max_chips`` (area IS the chip count, so area
+    budgets in requests are chip budgets). The default workload
+    (:func:`repro.core.lmcells.lm_workload`) covers Llama-3-8B and
+    Mixtral-8x22B -- built lazily only when no ``workload`` is given,
+    since it touches model code via ``jax.eval_shape``.
+    """
+
+    def __init__(
+        self,
+        store: ArtifactStore,
+        workload: Optional[Workload] = None,
+        hw: Optional[LMHardwareSpace] = None,
+        max_chips: int = 512,
+        downsample: int = 1,
+        engine: str = "auto",
+        gpu_name: str = LM_GPU_NAME,
+        batch_window: float = 0.002,
+        lru_size: int = 256,
+    ):
+        self._init_serving(store, batch_window, lru_size)
+        if workload is None:
+            from repro.core.lmcells import lm_workload
+
+            workload = lm_workload()
+        if getattr(workload, "family", "stencil") != "lm":
+            raise ValueError(
+                f"LMServer wants an LM workload, got family {workload.family!r}"
+            )
+        self.workload = workload
+        self.gpu_name = gpu_name
+        if hw is None:
+            hw = enumerate_lm_hw_space(max_chips=max_chips)
+            if downsample > 1:
+                hw = hw.downsample(downsample)
+        self.hw = hw
+        self.engine = engine
+        self.key = store.key_for_lm(self.workload, self.hw, engine, gpu_name)
+
+    def _solve(self) -> Artifact:
+        result = lm_codesign(
+            self.workload, hw=self.hw, engine=self.engine, gpu_name=self.gpu_name
+        )
+        return self.store.put(result, engine=self.engine)
+
+    @classmethod
+    def from_artifact(
+        cls,
+        store: ArtifactStore,
+        artifact: Artifact,
+        batch_window: float = 0.002,
+        lru_size: int = 256,
+    ) -> "LMServer":
+        """Wrap a stored LM sweep as a warm server (never sweeps); same
+        recomputed-key check as :meth:`CodesignServer.from_artifact`."""
+        m = artifact.manifest
+        workload, gpu_name, _lattices = LMCodesignResult.parse_manifest(m)
+        hw = LMHardwareSpace(
+            pod=np.asarray(artifact.hw_column("pod"), np.float64),
+            data=np.asarray(artifact.hw_column("data"), np.float64),
+            model=np.asarray(artifact.hw_column("model"), np.float64),
+            area=np.asarray(artifact.hw_area, np.float64),
+        )
+        engine = m.get("spec", {}).get("engine") or m.get("engine", "auto")
+        srv = cls(
+            store,
+            workload=workload,
+            hw=hw,
+            engine=engine,
+            gpu_name=gpu_name,
+            batch_window=batch_window,
+            lru_size=lru_size,
+        )
+        if srv.key != artifact.key:
+            raise ValueError(
+                f"artifact {artifact.key} does not reproduce its own content "
+                f"address (got {srv.key}); refusing to serve it"
+            )
+        srv._engine = QueryEngine(artifact, lru_size=lru_size)
+        srv.stats["artifact_loads"] += 1
+        return srv
+
+
+def server_from_artifact(
+    store: ArtifactStore,
+    artifact: Artifact,
+    batch_window: float = 0.002,
+    lru_size: int = 256,
+):
+    """Warm server for a discovered sweep artifact, dispatched on its
+    manifest's cell family -- the gateway's single construction point."""
+    if artifact.family == "lm":
+        return LMServer.from_artifact(store, artifact, batch_window, lru_size)
+    return CodesignServer.from_artifact(store, artifact, batch_window, lru_size)

@@ -64,6 +64,7 @@ __all__ = [
     "Artifact",
     "ArtifactStore",
     "artifact_spec",
+    "lm_artifact_spec",
     "spec_key",
 ]
 
@@ -153,6 +154,41 @@ def artifact_spec(
     }
 
 
+def lm_artifact_spec(workload: Workload, hw, engine: str, gpu_name: str) -> dict:
+    """Content-address identity of an LM-family sweep (family ``"lm"``).
+
+    Same contract as :func:`artifact_spec`: computable without running the
+    sweep, frequencies excluded (the matrix serves every mix), engine
+    resolved to its matrix family (float64 oracle vs float32 compiled) so
+    bit-identical engines share one key. Cells are keyed by their full
+    numeric identity -- model/op/shape plus the precomputed constants that
+    enter the time model -- so any change that could move the matrix moves
+    the key."""
+    from repro.core.lmcells import resolve_lm_engine, lm_sw_lattice
+
+    return {
+        "format_version": FORMAT_VERSION,
+        "family": "lm",
+        "cells": [
+            [
+                c.model, c.op, c.shape.name, int(c.shape.seq_len),
+                int(c.shape.global_batch), c.shape.kind, c.consts(),
+            ]
+            for c in workload.cells
+        ],
+        "gpu": gpu_name,
+        "hw_digest": _array_digest(hw.pod, hw.data, hw.model, hw.area),
+        "n_hw": len(hw),
+        "sw_lattices": sorted(
+            {
+                _canonical_json(lm_sw_lattice(c.op).as_dict())
+                for c in workload.cells
+            }
+        ),
+        "engine": resolve_lm_engine(engine),
+    }
+
+
 def spec_key(spec: dict) -> str:
     return hashlib.sha256(_canonical_json(spec).encode()).hexdigest()[:20]
 
@@ -195,11 +231,28 @@ class Artifact:
         return int(self.manifest["shapes"]["hw"])
 
     @property
+    def family(self) -> str:
+        """Cell family of a sweep artifact ("stencil" | "lm"); manifests
+        written before families existed are stencil sweeps."""
+        return self.manifest.get("workload", {}).get("family", "stencil")
+
+    @property
     def stencil_names(self) -> List[str]:
         seen: Dict[str, None] = {}
         for c in self.manifest["workload"]["cells"]:
             seen.setdefault(c["stencil"]["name"])
         return list(seen)
+
+    @property
+    def cell_labels(self) -> List[str]:
+        """Distinct cell group labels: stencil names, or ``model:op`` for
+        the LM family."""
+        if self.family == "lm":
+            seen: Dict[str, None] = {}
+            for c in self.manifest["workload"]["cells"]:
+                seen.setdefault(f"{c['model']}:{c['op']}")
+            return list(seen)
+        return self.stencil_names
 
     def routing(self) -> Dict[str, object]:
         """The manifest-only attribute row a gateway indexes this artifact
@@ -224,7 +277,13 @@ class Artifact:
             return r
         r.setdefault("gpu", m["gpu"]["name"])
         r.setdefault("workload", m["workload"]["name"])
-        r.setdefault("stencils", sorted(self.stencil_names))
+        r.setdefault("family", self.family)
+        if self.family == "lm":
+            cells = m["workload"]["cells"]
+            r.setdefault("models", sorted({c["model"] for c in cells}))
+            r.setdefault("ops", sorted({c["op"] for c in cells}))
+        else:
+            r.setdefault("stencils", sorted(self.stencil_names))
         r.update(
             key=self.key,
             kind=self.kind,
@@ -243,9 +302,14 @@ class Artifact:
         )
 
     def cell_flops(self) -> np.ndarray:
-        """(C,) useful flops per cell -- the GFLOP/s numerator."""
+        """(C,) useful flops per cell -- the GFLOP/s numerator. Stencil
+        cells derive it from the model (flops/point x points); LM cells
+        store it precomputed in their constants."""
+        cells = self.manifest["workload"]["cells"]
+        if self.family == "lm":
+            return np.array([c["consts"]["flops"] for c in cells], np.float64)
         out = np.empty(self.n_cells, np.float64)
-        for i, c in enumerate(self.manifest["workload"]["cells"]):
+        for i, c in enumerate(cells):
             sz = c["size"]
             points = float(sz["s1"]) * sz["s2"] * sz["s3"] * sz["t"]
             out[i] = c["stencil"]["flops_per_point"] * points
@@ -288,15 +352,29 @@ class Artifact:
         return self._arr("hw_area")
 
     def hw_column(self, name: str) -> np.ndarray:
-        """Hardware-space column by design-parameter name (what-if filters)."""
-        cols = {"n_sm": self.hw_n_sm, "n_v": self.hw_n_v, "m_sm": self.hw_m_sm,
-                "area": self.hw_area}
+        """Hardware-space column by design-parameter name (what-if filters).
+        Column names are family-specific: ``n_sm/n_v/m_sm/area`` for
+        stencil sweeps, ``pod/data/model/chips/area`` for LM sweeps (where
+        area IS the chip count)."""
+        if self.family == "lm":
+            cols = {"pod": "hw_pod", "data": "hw_data", "model": "hw_model",
+                    "chips": "hw_area", "area": "hw_area"}
+        else:
+            cols = {"n_sm": "hw_n_sm", "n_v": "hw_n_v", "m_sm": "hw_m_sm",
+                    "area": "hw_area"}
         if name not in cols:
             raise KeyError(f"unknown hardware parameter {name!r} (want one of {sorted(cols)})")
-        return cols[name]
+        return self._arr(cols[name])
 
     def point(self, i: int) -> Dict[str, float]:
         """Design parameters of hardware point ``i`` as a plain dict."""
+        if self.family == "lm":
+            return {
+                "pod": int(self._arr("hw_pod")[i]),
+                "data": int(self._arr("hw_data")[i]),
+                "model": int(self._arr("hw_model")[i]),
+                "chips": int(self.hw_area[i]),
+            }
         return {
             "n_sm": int(self.hw_n_sm[i]),
             "n_v": int(self.hw_n_v[i]),
@@ -304,9 +382,21 @@ class Artifact:
             "area": float(self.hw_area[i]),
         }
 
-    def to_result(self) -> CodesignResult:
-        """Materialize the full in-process object (round-trip inverse of
-        :meth:`ArtifactStore.put`)."""
+    def to_result(self):
+        """Materialize the full in-process result object (round-trip
+        inverse of :meth:`ArtifactStore.put`), dispatching on family."""
+        if self.family == "lm":
+            from repro.core.lmcells import LMCodesignResult
+
+            arrays = {
+                "cell_time": self.cell_time,
+                "cell_plan_idx": self._arr("cell_plan_idx"),
+                "hw_pod": self._arr("hw_pod"),
+                "hw_data": self._arr("hw_data"),
+                "hw_model": self._arr("hw_model"),
+                "hw_area": self.hw_area,
+            }
+            return LMCodesignResult.from_artifact_payload(self.manifest, arrays)
         arrays = {
             "cell_time": self.cell_time,
             "cell_tile_idx": self.cell_tile_idx,
@@ -346,6 +436,12 @@ class ArtifactStore:
         return spec_key(
             artifact_spec(workload, gpu, hw, engine, lattice_2d, lattice_3d)
         )
+
+    def key_for_lm(
+        self, workload: Workload, hw, engine: str = "auto", gpu_name: str = "tpu_v5e"
+    ) -> str:
+        """Content key of an LM-family sweep, computable before running it."""
+        return spec_key(lm_artifact_spec(workload, hw, engine, gpu_name))
 
     def _path(self, key: str) -> str:
         return os.path.join(self.root, key)
@@ -458,14 +554,23 @@ class ArtifactStore:
         attributes into the manifest's routing block (e.g. the
         ``calibration`` key of the fit a calibrated sweep derives from) --
         routing is not part of the content address, so this never moves
-        the key."""
-        lat2 = lattice_2d or next(
-            (lat for lat in result.lattices if len(lat.t_s3) == 1), LATTICE_2D
-        )
-        lat3 = lattice_3d or next(
-            (lat for lat in result.lattices if len(lat.t_s3) > 1), LATTICE_3D
-        )
-        spec = artifact_spec(result.workload, result.gpu, result.hw, engine, lat2, lat3)
+        the key. Dispatches on the result's cell family: LM results
+        (:class:`repro.core.lmcells.LMCodesignResult`) key via
+        :func:`lm_artifact_spec` (the tile-lattice pins do not apply)."""
+        if getattr(result, "family", "stencil") == "lm":
+            spec = lm_artifact_spec(
+                result.workload, result.hw, engine, result.gpu_name
+            )
+        else:
+            lat2 = lattice_2d or next(
+                (lat for lat in result.lattices if len(lat.t_s3) == 1), LATTICE_2D
+            )
+            lat3 = lattice_3d or next(
+                (lat for lat in result.lattices if len(lat.t_s3) > 1), LATTICE_3D
+            )
+            spec = artifact_spec(
+                result.workload, result.gpu, result.hw, engine, lat2, lat3
+            )
         key = spec_key(spec)
         manifest, arrays = result.artifact_payload()
         manifest.update(

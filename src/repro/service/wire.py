@@ -85,6 +85,7 @@ ERROR_HTTP_STATUS = {
     "bad_request": 400,
     "unsupported_version": 400,
     "wrong_artifact_kind": 400,
+    "ambiguous_workload": 400,
     "unknown_artifact": 404,
     "not_found": 404,
     "ambiguous_route": 409,

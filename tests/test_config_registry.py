@@ -1,0 +1,74 @@
+"""Config registry (repro.configs): deterministic auto-discovery of every
+config module, the ``get``/``list_archs`` lookup API, duplicate-name
+rejection, and re-import idempotence."""
+
+import importlib
+import pkgutil
+
+import pytest
+
+import repro.configs as configs_pkg
+from repro.configs import ARCHS, ArchConfig, get, get_arch, list_archs, register
+
+#: every named architecture the repo carries; a config module whose
+#: register() call went missing fails this list, not just its own tests.
+EXPECTED = (
+    "deepseek-v3-671b",
+    "gemma-7b",
+    "internlm2-1.8b",
+    "jamba-v0.1-52b",
+    "llama3-8b",
+    "mamba2-780m",
+    "minitron-4b",
+    "mixtral-8x22b",
+    "qwen2-vl-2b",
+    "whisper-medium",
+)
+
+
+def test_listing_is_sorted_deterministic_and_complete():
+    names = list_archs()
+    assert names == tuple(sorted(names))
+    assert names == EXPECTED
+    assert list_archs() == names  # stable across calls
+
+
+def test_get_resolves_every_listed_arch():
+    for name in list_archs():
+        cfg = get(name)
+        assert isinstance(cfg, ArchConfig)
+        assert cfg.name == name
+        assert get_arch(name) is cfg  # `get` is the alias, same object
+
+
+def test_get_unknown_name_is_a_keyerror_listing_known():
+    with pytest.raises(KeyError, match="unknown arch"):
+        get("llama3-8b-typo")
+
+
+def test_every_config_module_registers_exactly_its_archs():
+    """Auto-discovery imports every non-underscore module; each registered
+    arch must be attributable to exactly one import (no module registers
+    under another's name, no unregistered stragglers)."""
+    modules = [
+        m.name
+        for m in pkgutil.iter_modules(configs_pkg.__path__)
+        if not m.name.startswith("_") and m.name != "base"
+    ]
+    for name in modules:
+        importlib.import_module(f"repro.configs.{name}")
+    assert set(ARCHS) == set(EXPECTED)
+
+
+def test_duplicate_registration_rejected():
+    cfg = get("llama3-8b")
+    with pytest.raises(ValueError, match="duplicate"):
+        register(cfg)
+    assert get("llama3-8b") is cfg  # failed re-register leaves it intact
+
+
+def test_reimport_is_idempotent():
+    """Re-running the discovery module must not re-execute config modules
+    (sys.modules guards them), so no duplicate-registration blowups."""
+    importlib.reload(importlib.import_module("repro.configs._register_all"))
+    assert set(ARCHS) == set(EXPECTED)

@@ -1,0 +1,188 @@
+"""Gateway routing across cell families: the ``workload``/``family``/
+``models``/``ops`` selectors, cross-family ambiguity as a structured 400
+(``ambiguous_workload``, mirroring ``wrong_artifact_kind``'s
+classification), HTTP byte-identity vs the in-process LM server, and the
+CLI's ``--workload lm`` end-to-end path (the acceptance query: Llama-3-8B
+decode at batch 64 under a chip budget)."""
+
+import json
+import subprocess
+import sys
+import tempfile
+import threading
+
+import pytest
+
+from repro.configs import get_arch
+from repro.core import MAXWELL, enumerate_hw_space
+from repro.core.lmcells import enumerate_lm_hw_space, lm_workload
+from repro.core.timemodel import MAXWELL_GPU
+from repro.core.workload import paper_workload
+from repro.service import (
+    ArtifactStore,
+    CodesignServer,
+    Gateway,
+    GatewayClient,
+    QueryRequest,
+    RemoteError,
+    serve_http,
+    wire,
+)
+from repro.service.gateway import AmbiguousWorkloadError
+from repro.service.server import LMServer
+
+#: the stencil artifact's GPU name, reused for the LM sweep to force the
+#: cross-family collision the workload selector exists to resolve.
+GPU = MAXWELL_GPU.name
+MODEL = "llama3-8b-reduced"
+
+
+@pytest.fixture(scope="module")
+def fleet():
+    """One store holding a stencil sweep and an LM sweep for the SAME gpu
+    name, their oracle servers, a gateway, and a live HTTP endpoint."""
+    root = tempfile.mkdtemp(prefix="lmgw-")
+    store = ArtifactStore(root)
+    ssrv = CodesignServer(
+        store,
+        workload=paper_workload(["heat2d", "jacobi2d"]),
+        gpu=MAXWELL_GPU,
+        hw=enumerate_hw_space(MAXWELL, max_area=650.0).downsample(64),
+        engine="numpy",
+        batch_window=0.0,
+    )
+    ssrv.ensure_artifact()
+    lsrv = LMServer(
+        store,
+        workload=lm_workload(archs=[get_arch("llama3-8b").reduced()], name="lm"),
+        hw=enumerate_lm_hw_space(max_chips=32),
+        engine="numpy",
+        gpu_name=GPU,
+        batch_window=0.0,
+    )
+    lsrv.ensure_artifact()
+    gw = Gateway(root, batch_window=0.0)
+    httpd = serve_http(gw)
+    threading.Thread(target=httpd.serve_forever, daemon=True).start()
+    url = "http://%s:%d" % httpd.server_address[:2]
+    yield ssrv, lsrv, gw, url
+    httpd.shutdown()
+    httpd.server_close()
+
+
+def _req(**kw):
+    kw.setdefault("freqs", {f"{MODEL}:decode": 1.0})
+    kw.setdefault("use_cache", False)
+    return QueryRequest(**kw)
+
+
+def test_cross_family_ambiguity_is_structured_400(fleet):
+    _, _, gw, url = fleet
+    with pytest.raises(AmbiguousWorkloadError) as ei:
+        gw.resolve(route={"gpu": GPU})
+    assert ei.value.code == "ambiguous_workload"
+    assert ei.value.http_status == 400
+    assert "workload" in str(ei.value)  # tells the caller the fix
+    # same classification as wrong_artifact_kind: the request is at fault
+    assert (wire.ERROR_HTTP_STATUS["ambiguous_workload"]
+            == wire.ERROR_HTTP_STATUS["wrong_artifact_kind"] == 400)
+    # and the same failure crosses the wire structurally, never a 500
+    with pytest.raises(RemoteError) as ei:
+        GatewayClient(url).query(_req(), route={"gpu": GPU})
+    assert ei.value.code == "ambiguous_workload"
+    assert ei.value.http_status == 400
+
+
+def test_workload_and_family_selectors_resolve(fleet):
+    ssrv, lsrv, gw, _ = fleet
+    assert gw.resolve(route={"gpu": GPU, "workload": "lm"}) == lsrv.key
+    assert gw.resolve(route={"gpu": GPU, "family": "lm"}) == lsrv.key
+    assert gw.resolve(route={"gpu": GPU, "family": "stencil"}) == ssrv.key
+    assert gw.resolve(route={"workload": "paper-uniform"}) == ssrv.key
+    with pytest.raises(Exception, match="no stored artifact"):
+        gw.resolve(route={"workload": "nope"})
+
+
+def test_models_and_ops_subset_selectors(fleet):
+    _, lsrv, gw, _ = fleet
+    assert gw.resolve(route={"models": [MODEL]}) == lsrv.key
+    assert gw.resolve(route={"ops": ["decode", "train"]}) == lsrv.key
+    with pytest.raises(Exception, match="no stored artifact"):
+        gw.resolve(route={"ops": ["decode", "backprop"]})
+    # stencil subset selection is unaffected by the LM artifact
+    ssrv = fleet[0]
+    assert gw.resolve(route={"stencils": ["heat2d"]}) == ssrv.key
+
+
+def test_http_lm_answers_are_byte_identical_to_in_process(fleet):
+    _, lsrv, _, url = fleet
+    client = GatewayClient(url)
+    route = {"gpu": GPU, "workload": "lm"}
+    for req in (
+        _req(max_area=16.0, top_k=3, pareto=True),
+        _req(freqs={MODEL: 1.0}, top_k=5),              # model-level group
+        _req(freqs={"train": 1.0}, fix={"model": 2.0}),  # op group + what-if
+        _req(max_area=0.5),                             # infeasible budget
+    ):
+        raw = client.query_bytes(req, route=route)
+        assert raw == wire.encode_response(lsrv.query(req))
+    # the decoded answer is a mesh design point under the chip budget
+    resp = client.query(_req(max_area=16.0, top_k=3), route=route)
+    assert resp.best_index >= 0
+    assert set(resp.best_point) == {"pod", "data", "model", "chips"}
+    assert resp.best_point["chips"] <= 16
+
+
+def test_unknown_group_is_bad_request(fleet):
+    _, _, _, url = fleet
+    with pytest.raises(RemoteError) as ei:
+        GatewayClient(url).query(
+            _req(freqs={"not-a-group": 1.0}), route={"gpu": GPU, "workload": "lm"}
+        )
+    assert ei.value.code == "bad_request"
+    assert ei.value.http_status == 400
+
+
+def test_artifact_listing_carries_lm_routing(fleet):
+    _, lsrv, gw, _ = fleet
+    rows = {r["key"]: r for r in gw.entries()}
+    row = rows[lsrv.key]
+    assert row["family"] == "lm"
+    assert row["models"] == [MODEL]
+    assert row["ops"] == ["decode", "prefill", "train"]
+    stencil_rows = [r for r in rows.values() if r.get("family", "stencil") == "stencil"]
+    assert stencil_rows and all("models" not in r for r in stencil_rows)
+
+
+def test_cli_workload_lm_end_to_end(subprocess_env, tmp_path):
+    """The acceptance query: chip config for Llama-3-8B decode at batch 64
+    under a chip budget, via ``query --workload lm`` (cold build + warm)."""
+    cmd = [
+        sys.executable, "-m", "repro.service.cli", "query",
+        "--store", str(tmp_path), "--workload", "lm",
+        "--arch", "llama3-8b", "--chips", "64", "--engine", "numpy",
+        "--freq", "llama3-8b:decode=1", "--max-area", "64",
+        "--top-k", "3", "--json",
+    ]
+    out = subprocess.run(cmd, env=subprocess_env, capture_output=True, text=True)
+    assert out.returncode == 0, out.stderr
+    data = json.loads(out.stdout)
+    assert data["feasible"]
+    assert data["best"]["chips"] <= 64
+    assert {"pod", "data", "model"} <= set(data["best"])
+    assert len(data["top_k"]) <= 3
+    # second run answers warm from the stored artifact, byte-identical
+    again = subprocess.run(cmd, env=subprocess_env, capture_output=True, text=True)
+    assert again.returncode == 0, again.stderr
+    d2 = json.loads(again.stdout)
+    assert d2["origin"] == "warm" and d2["best"] == data["best"]
+
+
+def test_cli_rejects_lm_flags_without_lm_workload(subprocess_env, tmp_path):
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.service.cli", "query",
+         "--store", str(tmp_path), "--arch", "llama3-8b"],
+        env=subprocess_env, capture_output=True, text=True,
+    )
+    assert out.returncode == 2
+    assert "--workload lm" in out.stderr and "Traceback" not in out.stderr
