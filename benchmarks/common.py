@@ -6,6 +6,7 @@ from __future__ import annotations
 
 import datetime
 import json
+import math
 import os
 import time
 from typing import Callable, Dict
@@ -65,6 +66,57 @@ def emit(name: str, us_per_call: float, derived: str) -> None:
     print(f"{name},{us_per_call:.1f},{derived}")
 
 
+#: key suffixes that declare a units contract for trajectory fields --
+#: any field named ``*_s`` / ``*_qps`` / ``*_us`` (or any leaf under such
+#: a field, e.g. ``engines_total_s``'s per-engine values) must be a
+#: finite number, or the trajectory diff across PRs turns meaningless.
+_NUMERIC_SUFFIXES = ("_s", "_qps", "_us")
+
+
+def _leaves(value):
+    if isinstance(value, dict):
+        for v in value.values():
+            yield from _leaves(v)
+    elif isinstance(value, (list, tuple)):
+        for v in value:
+            yield from _leaves(v)
+    else:
+        yield value
+
+
+def validate_trajectory_entry(record: Dict) -> None:
+    """Schema gate for trajectory entries (raises ``TypeError``/
+    ``ValueError``): a dict carrying a non-empty ``"suite"`` string, with
+    every units-suffixed field (see ``_NUMERIC_SUFFIXES``) holding finite
+    numbers. A NaN/inf/None wall time means the suite recorded a
+    measurement it never actually took -- fail the run, don't commit it."""
+    if not isinstance(record, dict):
+        raise TypeError(
+            f"trajectory entry must be a dict, got {type(record).__name__}"
+        )
+    if not isinstance(record.get("suite"), str) or not record["suite"]:
+        raise ValueError("trajectory entry must carry a non-empty 'suite' string")
+
+    def _walk(obj: Dict, path: str) -> None:
+        for k, v in obj.items():
+            here = f"{path}.{k}" if path else str(k)
+            if str(k).endswith(_NUMERIC_SUFFIXES):
+                for leaf in _leaves(v):
+                    if (
+                        isinstance(leaf, bool)
+                        or not isinstance(leaf, (int, float))
+                        or not math.isfinite(leaf)
+                    ):
+                        raise ValueError(
+                            f"trajectory field {here!r} must hold finite "
+                            f"numbers, got {leaf!r}"
+                        )
+            elif isinstance(v, dict):
+                _walk(v, here)
+
+    _walk(record, "")
+
+
 def append_trajectory(name: str, record: Dict) -> str:
     """Append a timestamped entry to the repo-root ``BENCH_<name>.json``
     perf trajectory (a JSON list, one entry per recorded run), so wall-time
@@ -72,7 +124,9 @@ def append_trajectory(name: str, record: Dict) -> str:
 
     Unlike :func:`cache_json` artifacts (scratch outputs under
     ``benchmarks/artifacts/``), the trajectory is a *committed* file: each
-    PR's benchmark run extends it in place."""
+    PR's benchmark run extends it in place. Entries pass
+    :func:`validate_trajectory_entry` before touching the file."""
+    validate_trajectory_entry(record)
     path = os.path.join(REPO_ROOT, f"BENCH_{name}.json")
     entries = []
     if os.path.exists(path):

@@ -11,10 +11,15 @@ End-to-end, through the actual CLI entry points (no test fixtures):
    **byte-identical** to the in-process ``CodesignServer`` oracle for the
    same artifact + request (the acceptance criterion), and that the
    response routed to the correct artifact key;
-4. assert the structured error paths answer as documented
+4. scrape ``GET /v1/metrics`` and assert the observability layer counted
+   exactly the traffic issued: the ``/v1/query`` request counter matches
+   the byte-identity step's query count, per-artifact hit counters and
+   ``/v1/artifacts`` advisory ``hits``/``last_access`` rows agree, and
+   the Prometheus text exposition parses line by line;
+5. assert the structured error paths answer as documented
    (unknown artifact -> 404 ``unknown_artifact``, malformed JSON -> 400
    ``bad_request``) without taking the server down;
-5. assert ``serve`` on a missing store exits non-zero with a one-line
+6. assert ``serve`` on a missing store exits non-zero with a one-line
    error (no traceback).
 
 Exit 0 and print PASS only if every check holds.
@@ -65,7 +70,7 @@ def main() -> None:
     args = ap.parse_args()
     store_root = args.store or tempfile.mkdtemp(prefix="gateway-smoke-")
 
-    print(f"[1/5] building {len(GPUS)} artifacts under {store_root}")
+    print(f"[1/6] building {len(GPUS)} artifacts under {store_root}")
     for gpu in GPUS:
         subprocess.run(
             CLI + ["build", "--store", store_root, "--gpu", gpu,
@@ -81,7 +86,7 @@ def main() -> None:
         oracles[row["gpu"]] = CodesignServer.from_artifact(store, art, batch_window=0.0)
     check(set(oracles) == set(GPUS), f"store holds one artifact per GPU {GPUS}")
 
-    print("[2/5] starting the gateway (CLI serve, port 0)")
+    print("[2/6] starting the gateway (CLI serve, port 0)")
     proc = subprocess.Popen(
         CLI + ["serve", "--store", store_root, "--port", "0"],
         stdout=subprocess.PIPE, text=True, env=_env(),
@@ -97,7 +102,7 @@ def main() -> None:
         client = GatewayClient(url)
         check(client.health()["artifacts"] == len(GPUS), "healthz sees both artifacts")
 
-        print(f"[3/5] HTTP vs in-process oracle at {url}")
+        print(f"[3/6] HTTP vs in-process oracle at {url}")
         requests = [
             QueryRequest(freqs={"heat2d": 3.0, "jacobi2d": 1.0}, max_area=450.0,
                          top_k=3, use_cache=False),
@@ -114,7 +119,32 @@ def main() -> None:
                 check(resp.artifact_key == oracle.key,
                       f"routed to the {gpu} artifact")
 
-        print("[4/5] structured error paths")
+        print("[4/6] metrics scrape agrees with the traffic issued")
+        n_queries = len(oracles) * len(requests)
+        snap = client.metrics()  # canonical-JSON snapshot
+        got = sum(s["value"]
+                  for s in snap["repro_gateway_requests_total"]["samples"]
+                  if s["labels"].get("route") == "/v1/query")
+        check(got == n_queries,
+              f"/v1/query request counter == {n_queries} queries issued")
+        per_art = {s["labels"]["artifact"]: s["value"]
+                   for s in snap["repro_gateway_artifact_requests_total"]["samples"]}
+        check(all(per_art.get(o.key) == len(requests) for o in oracles.values()),
+              f"per-artifact hit counters == {len(requests)} each")
+        text = client.metrics("prometheus")
+        sample_re = re.compile(r'^[a-zA-Z_:][a-zA-Z0-9_:]*(\{[^}]*\})? -?[0-9.e+-]+$')
+        lines = [ln for ln in text.splitlines() if ln and not ln.startswith("#")]
+        check(bool(lines) and all(sample_re.match(ln) for ln in lines),
+              "prometheus text exposition parses line by line")
+        check("# TYPE repro_gateway_requests_total counter" in text,
+              "prometheus text carries TYPE metadata")
+        rows = {r["key"]: r for r in client.artifacts()}
+        check(all(rows[o.key]["hits"] == len(requests)
+                  and rows[o.key]["last_access"] is not None
+                  for o in oracles.values()),
+              "/v1/artifacts rows carry matching hits + last_access")
+
+        print("[5/6] structured error paths")
         try:
             client.query(requests[0], artifact="0" * 20)
             check(False, "unknown artifact must raise")
@@ -133,7 +163,7 @@ def main() -> None:
         proc.terminate()
         proc.wait(timeout=30)
 
-    print("[5/5] serve on a missing store exits cleanly")
+    print("[6/6] serve on a missing store exits cleanly")
     r = subprocess.run(
         CLI + ["serve", "--store", os.path.join(store_root, "nope"), "--port", "0"],
         capture_output=True, text=True, env=_env(), timeout=120,
@@ -141,7 +171,7 @@ def main() -> None:
     check(r.returncode == 2 and "error:" in r.stderr and "Traceback" not in r.stderr,
           "missing store -> exit 2, one-line error, no traceback")
 
-    print("PASS: gateway smoke (routing + HTTP transport + error paths)")
+    print("PASS: gateway smoke (routing + HTTP transport + metrics + error paths)")
 
 
 if __name__ == "__main__":

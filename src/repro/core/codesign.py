@@ -24,15 +24,33 @@ The inner solves run on one of three engines:
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
+
+from repro.obs.metrics import get_registry as _obs_registry
+from repro.obs.trace import span
 
 from .area import GTX980, TITAN_X, HardwarePoint, LinearAreaModel, MAXWELL
 from .pareto import pareto_mask
 from .solver import LATTICE_2D, LATTICE_3D, TileLattice, decode_index, solve_cell
 from .timemodel import GPUSpec, MAXWELL_GPU, ProblemSize, stencil_time
 from .workload import Workload, WorkloadCell
+
+# ---- observability (repro.obs; no-ops under REPRO_OBS_DISABLED=1) --------
+_REG = _obs_registry()
+_M_CODESIGN_SECONDS = _REG.histogram(
+    "repro_codesign_seconds",
+    "wall time of one full codesign() sweep (all cells x hardware "
+    "points), by resolved engine and cell family",
+    labels=("engine", "family"),
+)
+_M_CODESIGN_CELLS = _REG.counter(
+    "repro_codesign_cells_total",
+    "workload cells swept by codesign(), by resolved engine",
+    labels=("engine",),
+)
 
 __all__ = [
     "HardwareSpace",
@@ -441,9 +459,17 @@ def codesign(
     model, tile lattices) do not apply there.
     """
     if getattr(workload, "family", "stencil") == "lm":
-        from .lmcells import lm_codesign
+        from .lmcells import lm_codesign, resolve_lm_engine
 
-        return lm_codesign(workload, hw=hw, engine=engine)
+        t0 = time.perf_counter()
+        with span("codesign", family="lm"):
+            result = lm_codesign(workload, hw=hw, engine=engine)
+        eng = resolve_lm_engine(engine)
+        _M_CODESIGN_SECONDS.labels(engine=eng, family="lm").observe(
+            time.perf_counter() - t0
+        )
+        _M_CODESIGN_CELLS.labels(engine=eng).inc(len(workload.cells))
+        return result
     if hw is None:
         hw = enumerate_hw_space(area_model, max_area=max_area)
     eng = _resolve_engine(engine, len(hw), devices)
@@ -453,35 +479,46 @@ def codesign(
     lattices: List[TileLattice] = [
         lattice_3d if c.stencil.dims == 3 else lattice_2d for c in workload.cells
     ]
-    if eng in ("jax", "sharded"):
-        # one compiled dispatch per stencil family: all of a stencil's
-        # problem sizes ride the sweep's extra vmap axis (amortizes
-        # dispatch/launch overhead on accelerators; same argmins).
-        from . import sweep
+    t0 = time.perf_counter()
+    with span("codesign", family="stencil", engine=eng, cells=C, hw=H):
+        if eng in ("jax", "sharded"):
+            # one compiled dispatch per stencil family: all of a stencil's
+            # problem sizes ride the sweep's extra vmap axis (amortizes
+            # dispatch/launch overhead on accelerators; same argmins).
+            from . import sweep
 
-        for st, cis, sizes in _stencil_groups(workload).values():
-            if eng == "sharded":
-                t, i = sweep.sweep_cells_sharded(
-                    st, gpu, sizes, hw.n_sm, hw.n_v, hw.m_sm,
-                    lattices[cis[0]], chunk, devices=devices,
+            for st, cis, sizes in _stencil_groups(workload).values():
+                if eng == "sharded":
+                    t, i = sweep.sweep_cells_sharded(
+                        st, gpu, sizes, hw.n_sm, hw.n_v, hw.m_sm,
+                        lattices[cis[0]], chunk, devices=devices,
+                    )
+                else:
+                    t, i = sweep.sweep_cells(
+                        st, gpu, sizes, hw.n_sm, hw.n_v, hw.m_sm,
+                        lattices[cis[0]], chunk,
+                    )
+                for j, ci in enumerate(cis):
+                    cell_time[ci] = t[j]
+                    cell_idx[ci] = i[j]
+        else:
+            np_chunk = 512 if chunk is None else chunk
+            for ci, cell in enumerate(workload.cells):
+                t, i = solve_cell(
+                    cell.stencil, gpu, cell.size, hw.n_sm, hw.n_v, hw.m_sm,
+                    lattices[ci], np_chunk,
                 )
-            else:
-                t, i = sweep.sweep_cells(
-                    st, gpu, sizes, hw.n_sm, hw.n_v, hw.m_sm,
-                    lattices[cis[0]], chunk,
-                )
-            for j, ci in enumerate(cis):
-                cell_time[ci] = t[j]
-                cell_idx[ci] = i[j]
-    else:
-        np_chunk = 512 if chunk is None else chunk
-        for ci, cell in enumerate(workload.cells):
-            t, i = solve_cell(
-                cell.stencil, gpu, cell.size, hw.n_sm, hw.n_v, hw.m_sm,
-                lattices[ci], np_chunk,
-            )
-            cell_time[ci] = t
-            cell_idx[ci] = i
+                cell_time[ci] = t
+                cell_idx[ci] = i
+            # the seed oracle has no per-dispatch hook of its own: account
+            # its cell evaluations here so engine throughput is comparable
+            from repro.core.sweep import _M_CELL_EVALS
+
+            _M_CELL_EVALS.labels(engine="numpy").inc(C * H)
+    _M_CODESIGN_SECONDS.labels(engine=eng, family="stencil").observe(
+        time.perf_counter() - t0
+    )
+    _M_CODESIGN_CELLS.labels(engine=eng).inc(C)
     return CodesignResult(workload, gpu, hw, cell_time, cell_idx, lattices)
 
 

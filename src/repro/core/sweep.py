@@ -37,10 +37,14 @@ to the NumPy reference solver instead of this module.
 from __future__ import annotations
 
 import functools
+import threading
+import time
 import warnings
 from typing import Dict, Tuple
 
 import numpy as np
+
+from repro.obs.metrics import get_registry as _obs_registry
 
 from .solver import TileLattice
 from .solver import _STEPS as _SOLVER_STEPS
@@ -98,6 +102,44 @@ SW_NAMES = ("t_s1", "t_s2", "t_t", "k", "t_s3")
 #: oracle's table so the two refine paths can never drift apart.
 SW_STEPS = tuple(float(_SOLVER_STEPS[k]) for k in SW_NAMES)
 SW_MINS = tuple(1.0 if k == "t_s1" else float(_SOLVER_STEPS[k]) for k in SW_NAMES)
+
+# ---- observability (repro.obs; no-ops under REPRO_OBS_DISABLED=1) --------
+_REG = _obs_registry()
+_M_DISPATCH_SECONDS = _REG.histogram(
+    "repro_sweep_dispatch_seconds",
+    "wall time of one compiled sweep dispatch (solve call through host "
+    "materialization), split by engine and compile phase: 'first' is the "
+    "initial dispatch of a (solver, shape) pair -- XLA tracing + "
+    "compilation included -- 'steady' is every re-dispatch of the cached "
+    "executable. An approximation of compile-vs-execute: jax keys its "
+    "executable cache the same way",
+    labels=("engine", "phase"),
+)
+_M_CELL_EVALS = _REG.counter(
+    "repro_sweep_cell_evals_total",
+    "optima-matrix entries produced (P sizes x H hardware points per "
+    "dispatch) -- divide by dispatch seconds for cells/sec",
+    labels=("engine",),
+)
+
+#: (solver id, shapes) pairs whose first (compiling) dispatch has been
+#: seen; cleared alongside the solver caches in :func:`clear_caches`.
+_DISPATCH_SEEN: set = set()
+_DISPATCH_MU = threading.Lock()
+
+
+def _note_dispatch(engine: str, cache_key: tuple, p: int, h: int, dt: float) -> None:
+    """Record one dispatch, classified first/steady by whether this
+    (solver, shape) pair has dispatched before (mirrors jax's retrace
+    rule: a cached solver re-invoked on new shapes recompiles)."""
+    with _DISPATCH_MU:
+        first = cache_key not in _DISPATCH_SEEN
+        if first:
+            _DISPATCH_SEEN.add(cache_key)
+    _M_DISPATCH_SECONDS.labels(
+        engine=engine, phase="first" if first else "steady"
+    ).observe(dt)
+    _M_CELL_EVALS.labels(engine=engine).inc(p * h)
 
 
 def _require_jax():
@@ -364,6 +406,8 @@ def sweep_cells(
     lattice, sizes, chunk = _prep_cells(st, sizes, lattice, chunk)
     solve = _cells_solver(st.dims, gpu, lattice, chunk)
     f32 = functools.partial(jnp.asarray, dtype=jnp.float32)
+    h = np.asarray(n_sm).size
+    t0 = time.perf_counter()
     best_t, best_i = solve(
         f32(np.asarray(n_sm).ravel()),
         f32(np.asarray(n_v).ravel()),
@@ -373,10 +417,15 @@ def sweep_cells(
         f32(st.c_iter),
         f32(st.n_arrays),
     )
-    return (
-        np.asarray(best_t, np.float64),
+    out = (
+        np.asarray(best_t, np.float64),  # blocks until the dispatch is done
         np.asarray(best_i, np.int64),
     )
+    _note_dispatch(
+        "jax", (id(solve), sizes.shape, h), sizes.shape[0], h,
+        time.perf_counter() - t0,
+    )
+    return out
 
 
 def sweep_cells_sharded(
@@ -432,6 +481,7 @@ def sweep_cells_sharded(
     shard = NamedSharding(mesh, P("hw"))
     repl = NamedSharding(mesh, P())
     f32 = functools.partial(jnp.asarray, dtype=jnp.float32)
+    t0 = time.perf_counter()
     with warnings.catch_warnings():
         # the hw slabs are donated for accelerator meshes (dead after the
         # stack); on hosts where no output can alias them XLA drops the
@@ -446,10 +496,15 @@ def sweep_cells_sharded(
             f32(st.c_iter),
             f32(st.n_arrays),
         )
-    return (
-        np.asarray(best_t, np.float64)[:, :h],
+    out = (
+        np.asarray(best_t, np.float64)[:, :h],  # blocks on the dispatch
         np.asarray(best_i, np.int64)[:, :h],
     )
+    _note_dispatch(
+        "sharded", (id(solve), sizes.shape, h_pad), sizes.shape[0], h,
+        time.perf_counter() - t0,
+    )
+    return out
 
 
 def sweep_cell(
@@ -619,3 +674,7 @@ def clear_caches() -> None:
     _cells_solver.cache_clear()
     _sharded_cells_solver.cache_clear()
     _refine_descent.cache_clear()
+    with _DISPATCH_MU:
+        # cleared solvers recompile, so their next dispatch is 'first'
+        # again (and a recycled id() must not classify it 'steady')
+        _DISPATCH_SEEN.clear()

@@ -37,6 +37,19 @@ from repro.core.timemodel import (
     feasible,
 )
 from repro.kernels.pallas_stencils import TILE_NAMES, normalize_tiles, run_tiled
+from repro.obs.metrics import get_registry as _obs_registry
+
+# ---- observability (repro.obs; no-ops under REPRO_OBS_DISABLED=1) --------
+_REG = _obs_registry()
+_M_POINTS = _REG.counter(
+    "repro_measure_points_total",
+    "measured (stencil, size, tiles) points, by stencil",
+    labels=("stencil",),
+)
+_M_POINT_SECONDS = _REG.histogram(
+    "repro_measure_point_seconds",
+    "median wall seconds of one measured point (the recorded time_s)",
+)
 
 __all__ = [
     "MeasurementRecord",
@@ -81,6 +94,10 @@ class MeasurementRecord:
     hw: Tuple[float, float, float]  # (n_sm, n_v, m_sm) nominal description
     repeats: int = 1
     warmup: int = 1
+    #: every timed repeat, in call order (time_s is their median). Optional
+    #: telemetry: serialized only when present, tolerated absent so old
+    #: manifests (and hand-written fixtures) still load.
+    times_s: Optional[Tuple[float, ...]] = None
 
     def problem_size(self) -> ProblemSize:
         s1, s2, s3, t = self.size
@@ -90,7 +107,7 @@ class MeasurementRecord:
         return dict(zip(TILE_NAMES, self.tiles))
 
     def to_json(self) -> dict:
-        return {
+        out = {
             "stencil": self.stencil,
             "size": list(self.size),
             "tiles": list(self.tiles),
@@ -99,9 +116,13 @@ class MeasurementRecord:
             "repeats": int(self.repeats),
             "warmup": int(self.warmup),
         }
+        if self.times_s is not None:
+            out["times_s"] = [float(t) for t in self.times_s]
+        return out
 
     @classmethod
     def from_json(cls, obj: Mapping) -> "MeasurementRecord":
+        raw_times = obj.get("times_s")
         return cls(
             stencil=str(obj["stencil"]),
             size=tuple(int(v) for v in obj["size"]),
@@ -110,6 +131,8 @@ class MeasurementRecord:
             hw=tuple(float(v) for v in obj["hw"]),
             repeats=int(obj.get("repeats", 1)),
             warmup=int(obj.get("warmup", 1)),
+            times_s=None if raw_times is None
+            else tuple(float(t) for t in raw_times),
         )
 
 
@@ -231,14 +254,18 @@ def measure_one(
         int(shape[2]) if dims == 3 else 1,
         int(steps),
     )
+    median = float(statistics.median(times))
+    _M_POINTS.labels(stencil=name).inc()
+    _M_POINT_SECONDS.observe(median)
     return MeasurementRecord(
         stencil=name,
         size=size,
         tiles=tile_tuple,
-        time_s=float(statistics.median(times)),
+        time_s=median,
         hw=(hw["n_sm"], hw["n_v"], hw["m_sm"]),
         repeats=int(repeats),
         warmup=int(warmup),
+        times_s=tuple(float(t) for t in times),
     )
 
 

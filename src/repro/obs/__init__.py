@@ -1,0 +1,41 @@
+"""Dependency-free observability for the codesign stack.
+
+Three small, stdlib-only modules, threaded through every hot path of the
+sweep/serve/gateway system (see ``docs/observability.md``):
+
+* :mod:`repro.obs.metrics` -- a process-wide registry of thread-safe
+  counters, gauges, and fixed-bucket histograms with snapshot/reset
+  semantics and two exporters (Prometheus text + canonical JSON). The
+  gateway serves it at ``GET /v1/metrics``.
+* :mod:`repro.obs.trace`   -- context-manager spans over the monotonic
+  clock with parent/child nesting and a per-request trace id that rides
+  the HTTP wire as an ``X-Repro-Trace`` header; a ``"trace": true``
+  request envelope field returns the span tree in the response.
+* :mod:`repro.obs.logging` -- structured JSON line logging with a
+  verbosity knob (the CLI ``serve --log-level`` flag).
+
+Design rule: observability is **additive, never on the answer path**.
+Untraced ``/v1/query`` responses stay byte-identical whether or not
+instrumentation is enabled, and ``REPRO_OBS_DISABLED=1`` turns every
+metric into a no-op (asserted < 5% throughput delta in
+``benchmarks/bench_service.py``).
+"""
+
+from .logging import configure_logging, get_logger  # noqa: F401
+from .metrics import (  # noqa: F401
+    Counter,
+    Gauge,
+    Histogram,
+    Registry,
+    get_registry,
+    set_disabled,
+)
+from .trace import (  # noqa: F401
+    TRACE_HEADER,
+    Span,
+    current_span,
+    current_trace_id,
+    new_trace_id,
+    span,
+    trace,
+)

@@ -419,7 +419,13 @@ def cmd_serve(args) -> None:
     Exits 2 with a one-line message (no traceback) when a root is missing
     or holds no artifacts -- a gateway with nothing to serve is a
     misconfiguration, not a valid idle state."""
+    from repro.obs import configure_logging
+
     from .gateway import Gateway, serve_http
+
+    # default quiet: WARNING keeps per-request access lines (DEBUG) and
+    # lifecycle notes (INFO) off the console the smoke lane parses
+    configure_logging(args.log_level)
 
     # the default store joins the root list only when no root was named
     # explicitly: `serve --root /data/fleet` must not die because the
@@ -432,6 +438,7 @@ def cmd_serve(args) -> None:
             roots,
             pool_size=args.pool_size,
             batch_window=args.batch_window,
+            telemetry_interval=args.telemetry_interval,
         )
     except FileNotFoundError as e:
         raise _die(str(e))
@@ -527,6 +534,15 @@ def main(argv=None) -> None:
                    help="max resident per-artifact servers (LRU beyond)")
     s.add_argument("--batch-window", type=float, default=0.002,
                    help="per-artifact microbatch rendezvous window, seconds")
+    s.add_argument("--log-level", default="warning",
+                   choices=("debug", "info", "warning", "error"),
+                   help="structured-log verbosity on stderr (JSON lines; "
+                        "debug includes per-request access logs; default "
+                        "warning = quiet)")
+    s.add_argument("--telemetry-interval", type=float, default=0.0,
+                   help="seconds between persisted per-artifact telemetry "
+                        "snapshots (kind: 'telemetry' store artifacts; "
+                        "0 = off, the default)")
     s.set_defaults(fn=cmd_serve)
 
     args = ap.parse_args(argv)

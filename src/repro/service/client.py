@@ -44,6 +44,7 @@ from urllib.parse import urlsplit
 
 from . import wire
 from .query import QueryRequest, QueryResponse
+from repro.obs.trace import TRACE_HEADER
 
 __all__ = ["GatewayClient"]
 
@@ -70,6 +71,7 @@ class GatewayClient:
         self._conn: Optional[http.client.HTTPConnection] = None
         self._mu = threading.Lock()
         self._last_status = 0  # HTTP status of the most recent call
+        self._last_trace_id = ""  # X-Repro-Trace echoed by the most recent call
 
     # ---- transport --------------------------------------------------------
     def _drop(self) -> None:
@@ -91,7 +93,12 @@ class GatewayClient:
     def __exit__(self, *exc) -> None:
         self.close()
 
-    def _request(self, path: str, body: Optional[bytes] = None) -> Tuple[bytes, int]:
+    def _request(
+        self,
+        path: str,
+        body: Optional[bytes] = None,
+        headers: Optional[Mapping[str, str]] = None,
+    ) -> Tuple[bytes, int]:
         """One request; returns ``(raw body, HTTP status)``. HTTP error
         statuses still carry wire payloads -- the body is returned (not
         raised) so the decoder can surface the server's structured code.
@@ -99,7 +106,7 @@ class GatewayClient:
         two threads sharing a client must never pair one request's body
         with the other's status."""
         method = "POST" if body is not None else "GET"
-        headers = {"Content-Type": "application/json"}
+        hdrs = {"Content-Type": "application/json", **(headers or {})}
         with self._mu:
             for attempt in (0, 1):
                 reused = self._conn is not None
@@ -108,10 +115,11 @@ class GatewayClient:
                 )
                 self._conn = None
                 try:
-                    conn.request(method, self._path_prefix + path, body, headers)
+                    conn.request(method, self._path_prefix + path, body, hdrs)
                     resp = conn.getresponse()
                     data = resp.read()
                     self._last_status = resp.status
+                    self._last_trace_id = resp.getheader(TRACE_HEADER, "")
                 except (http.client.HTTPException, OSError) as e:
                     try:
                         conn.close()
@@ -170,6 +178,49 @@ class GatewayClient:
             "/v1/query", wire.encode_request(request, artifact=artifact, route=route)
         )
         return wire.decode_response(body, http_status=status)
+
+    def query_traced(
+        self,
+        request: QueryRequest,
+        artifact: Optional[str] = None,
+        route: Optional[Mapping[str, Any]] = None,
+        trace_id: Optional[str] = None,
+    ) -> Tuple[QueryResponse, Optional[Dict[str, Any]]]:
+        """Like :meth:`query` but with ``"trace": true`` in the envelope:
+        returns ``(response, span_tree)`` where the span tree is the
+        gateway's ``gateway.request`` root (``trace_id``, ``dur_us``,
+        nested ``children``) for THIS request. Pass ``trace_id`` to
+        correlate with client-side logs; otherwise the gateway mints one
+        (echoed in the ``X-Repro-Trace`` response header, readable via
+        :attr:`last_trace_id`). Tracing adds a ``"trace"`` field to the
+        response envelope, so the bytes intentionally differ from an
+        untraced answer; the decoded :class:`QueryResponse` is identical."""
+        hdrs = {TRACE_HEADER: trace_id} if trace_id else None
+        body, status = self._request(
+            "/v1/query",
+            wire.encode_request(request, artifact=artifact, route=route, trace=True),
+            headers=hdrs,
+        )
+        return wire.decode_response_traced(body, http_status=status)
+
+    @property
+    def last_trace_id(self) -> str:
+        """``X-Repro-Trace`` from the most recent response (empty before
+        the first call). Single-threaded pairing only, like
+        ``_last_status``."""
+        return self._last_trace_id
+
+    def metrics(self, fmt: str = "json") -> Union[Dict[str, Any], str]:
+        """Scrape ``GET /v1/metrics``: ``fmt="json"`` returns the decoded
+        snapshot dict, ``fmt="prometheus"`` the text exposition as str."""
+        if fmt == "json":
+            return self._json("/v1/metrics?format=json")
+        raw, status = self._request(f"/v1/metrics?format={fmt}")
+        if not 200 <= status < 300:
+            raise wire.RemoteError(
+                "bad_request", raw[:200].decode("utf-8", "replace"), status
+            )
+        return raw.decode("utf-8")
 
     def query_many(
         self,

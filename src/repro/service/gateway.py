@@ -28,14 +28,21 @@ through a single long-lived endpoint. The gateway closes that gap:
   queries (the query path holds a reference) and are garbage-collected;
 * **HTTP transport** -- :class:`GatewayHTTPServer` (stdlib
   ``ThreadingHTTPServer``; one thread per connection) exposes
-  ``POST /v1/query``, ``GET /v1/artifacts``, ``GET /v1/healthz`` and
-  ``POST /v1/refresh`` over the :mod:`repro.service.wire` codec.
-  Concurrent HTTP requests for the same artifact rendezvous in that
-  artifact's ``CodesignServer.query``, so the leader/follower
-  microbatching survives the process boundary unchanged.
+  ``POST /v1/query``, ``GET /v1/artifacts``, ``GET /v1/healthz``,
+  ``GET /v1/metrics`` and ``POST /v1/refresh`` over the
+  :mod:`repro.service.wire` codec. Concurrent HTTP requests for the same
+  artifact rendezvous in that artifact's ``CodesignServer.query``, so the
+  leader/follower microbatching survives the process boundary unchanged;
+* **observability** -- every request lands in the :mod:`repro.obs`
+  metrics registry (per-route and per-artifact counters + latency
+  histograms, served back at ``/v1/metrics``), query routes carry an
+  ``X-Repro-Trace`` id, a ``"trace": true`` envelope opts into span
+  recording, and ``telemetry_interval`` periodically persists per-artifact
+  hit/latency stats as ``kind: "telemetry"`` manifest-only artifacts.
 
 Wire format, error codes and a curl-able quickstart are documented in
-``docs/serving.md``; the request flow diagram lives in
+``docs/serving.md``; the observability surface in
+``docs/observability.md``; the request flow diagram lives in
 ``docs/architecture.md``.
 """
 
@@ -43,10 +50,17 @@ from __future__ import annotations
 
 import json
 import os
+import re
 import threading
+import time
 from collections import OrderedDict
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 from typing import Any, Dict, List, Mapping, Optional, Sequence, Tuple, Union
+from urllib.parse import parse_qs, urlsplit
+
+from repro.obs import get_logger
+from repro.obs.metrics import get_registry as _obs_registry
+from repro.obs.trace import TRACE_HEADER, new_trace_id, span, trace
 
 from . import wire
 from .query import QueryRequest, QueryResponse
@@ -80,6 +94,49 @@ ROUTE_SELECTORS = (
 
 #: selectors matched as subsets rather than exact equality.
 _SUBSET_SELECTORS = ("stencils", "models", "ops")
+
+# ---- observability (repro.obs; no-ops under REPRO_OBS_DISABLED=1) --------
+_LOG = get_logger("repro.gateway")
+_REG = _obs_registry()
+_M_REQUESTS = _REG.counter(
+    "repro_gateway_requests_total", "HTTP requests handled, by route",
+    labels=("route",),
+)
+_M_REQUEST_SECONDS = _REG.histogram(
+    "repro_gateway_request_seconds",
+    "end-to-end HTTP request wall time (decode -> encode), by route",
+    labels=("route",),
+)
+_M_ERRORS = _REG.counter(
+    "repro_gateway_errors_total", "error responses, by route and wire code",
+    labels=("route", "code"),
+)
+_M_ENCODE_SECONDS = _REG.histogram(
+    "repro_gateway_encode_seconds", "wire-encoding wall time of /v1/query answers",
+)
+_M_ART_REQUESTS = _REG.counter(
+    "repro_gateway_artifact_requests_total",
+    "queries routed to each artifact (the per-artifact hit stats behind "
+    "/v1/artifacts and the persisted telemetry snapshots)",
+    labels=("artifact",),
+)
+_M_ART_LAST = _REG.gauge(
+    "repro_gateway_artifact_last_access_seconds",
+    "unix time of each artifact's most recent routed query",
+    labels=("artifact",),
+)
+_M_ART_SECONDS = _REG.histogram(
+    "repro_gateway_artifact_query_seconds",
+    "server dispatch wall time per routed artifact",
+    labels=("artifact",),
+)
+
+#: the bounded set of HTTP route labels (unknown paths all fold into
+#: "other" so a path-scanning client can't explode label cardinality).
+_ROUTES = (
+    "/v1/query", "/v1/query_many", "/v1/artifacts", "/v1/healthz",
+    "/v1/metrics", "/v1/refresh",
+)
 
 
 class GatewayError(Exception):
@@ -145,6 +202,11 @@ class Gateway:
     batch_window / lru_size:
         Forwarded to each pooled :class:`CodesignServer` /
         :class:`~repro.service.query.QueryEngine`.
+    telemetry_interval:
+        Seconds between persisted per-artifact telemetry snapshots
+        (:meth:`persist_telemetry`); ``0`` (the default) disables
+        persistence entirely -- stored artifact counts then never drift
+        under test/smoke query load.
     """
 
     def __init__(
@@ -153,6 +215,7 @@ class Gateway:
         pool_size: int = 8,
         batch_window: float = 0.002,
         lru_size: int = 256,
+        telemetry_interval: float = 0.0,
     ):
         if isinstance(roots, (str, os.PathLike)):
             roots = [roots]
@@ -164,6 +227,10 @@ class Gateway:
             raise ValueError("pool_size must be >= 1")
         self.batch_window = float(batch_window)
         self.lru_size = int(lru_size)
+        self.telemetry_interval = float(telemetry_interval)
+        self._t0_mono = time.monotonic()  # uptime basis (NTP-step immune)
+        self._telemetry_mu = threading.Lock()
+        self._telemetry_last = time.monotonic()
         self._mu = threading.Lock()  # guards _index and _pool
         self._index: "OrderedDict[str, Dict[str, Any]]" = OrderedDict()
         self._pool: "OrderedDict[str, CodesignServer]" = OrderedDict()
@@ -204,12 +271,23 @@ class Gateway:
 
     def entries(self) -> List[Dict[str, Any]]:
         """Routing rows (sans store handles) -- the ``/v1/artifacts``
-        payload."""
+        payload. Each row carries advisory ``hits`` / ``last_access``
+        fields sourced from the live metrics registry (queries routed to
+        that artifact since process start; ``last_access`` is unix seconds
+        or None). Advisory means: process-local, reset on restart, and
+        deliberately excluded from the canonical wire byte-identity
+        surface (only ``/v1/query`` answers carry that guarantee)."""
         with self._mu:
-            return [
+            rows = [
                 {k: v for k, v in row.items() if k != "store"}
                 for row in self._index.values()
             ]
+        for row in rows:
+            hits = _M_ART_REQUESTS.get(artifact=row["key"])
+            last = _M_ART_LAST.get(artifact=row["key"])
+            row["hits"] = int(hits.value) if hits is not None else 0
+            row["last_access"] = last.value if last is not None else None
+        return rows
 
     def __len__(self) -> int:
         with self._mu:
@@ -390,6 +468,13 @@ class Gateway:
         return srv
 
     # ---- queries ----------------------------------------------------------
+    def _note_artifact(self, key: str, dispatch_s: float, n: int = 1) -> None:
+        """Per-artifact hit accounting behind ``/v1/artifacts`` rows and
+        the persisted telemetry snapshots."""
+        _M_ART_REQUESTS.labels(artifact=key).inc(n)
+        _M_ART_LAST.labels(artifact=key).set(time.time())
+        _M_ART_SECONDS.labels(artifact=key).observe(dispatch_s)
+
     def query(
         self,
         request: QueryRequest,
@@ -400,8 +485,16 @@ class Gateway:
         any concurrent caller of the same artifact) and answer it."""
         with self._mu:
             self.stats["requests"] += 1
-        key = self.resolve(artifact, route)
-        return self.server_for(key).query(request)
+        with span("resolve"):
+            key = self.resolve(artifact, route)
+        with span("pool", artifact=key[:12]):
+            srv = self.server_for(key)
+        t0 = time.perf_counter()
+        with span("dispatch", artifact=key[:12]):
+            response = srv.query(request)
+        self._note_artifact(key, time.perf_counter() - t0)
+        self._maybe_persist_telemetry()
+        return response
 
     def query_many(
         self,
@@ -459,9 +552,11 @@ class Gateway:
                 for i in idxs:
                     results[i] = (e.code, str(e))
                 return
+            t0 = time.perf_counter()
             try:
                 for i, resp in zip(idxs, srv.query_many([queries[i][0] for i in idxs])):
                     results[i] = resp
+                self._note_artifact(key, time.perf_counter() - t0, n=len(idxs))
             except Exception:  # noqa: BLE001 - isolate the poison pill
                 for i in idxs:
                     try:
@@ -474,6 +569,7 @@ class Gateway:
                         )
                     except Exception as e:  # noqa: BLE001 - boundary
                         results[i] = ("internal", f"{type(e).__name__}: {e}")
+                self._note_artifact(key, time.perf_counter() - t0, n=len(idxs))
 
         if len(groups) <= 1:
             for key, idxs in groups.items():
@@ -491,42 +587,143 @@ class Gateway:
             with ThreadPoolExecutor(max_workers=workers) as pool:
                 for key, idxs in groups.items():
                     pool.submit(answer_group, key, idxs)
+        self._maybe_persist_telemetry()
         return results
 
     def health(self) -> Dict[str, Any]:
         with self._mu:
             return {
                 "ok": True,
+                "uptime_s": round(time.monotonic() - self._t0_mono, 3),
                 "artifacts": len(self._index),
                 "pooled_servers": len(self._pool),
                 "pool_size": self.pool_size,
+                "telemetry_interval": self.telemetry_interval,
                 "roots": [s.root for s in self.stores],
                 "stats": dict(self.stats),
             }
+
+    # ---- telemetry persistence --------------------------------------------
+    def artifact_stats(self) -> Dict[str, Dict[str, Any]]:
+        """Per-artifact hit/latency stats for every *indexed* artifact,
+        read from the live metrics registry (never minting zero samples
+        for untouched keys). The payload of :meth:`persist_telemetry`."""
+        out: Dict[str, Dict[str, Any]] = {}
+        for key in self.keys():
+            hits = _M_ART_REQUESTS.get(artifact=key)
+            last = _M_ART_LAST.get(artifact=key)
+            lat = _M_ART_SECONDS.get(artifact=key)
+            out[key] = {
+                "hits": int(hits.value) if hits is not None else 0,
+                "last_access": last.value if last is not None else None,
+                "query_seconds_count": lat.count if lat is not None else 0,
+                "query_seconds_sum": lat.sum if lat is not None else 0.0,
+            }
+        return out
+
+    def persist_telemetry(self, store: Optional[ArtifactStore] = None) -> str:
+        """Write the current per-artifact hit/latency stats as a
+        ``kind: "telemetry"`` manifest-only artifact (first store root by
+        default) and return its content key.
+
+        Each snapshot carries its collection time, so successive snapshots
+        get distinct keys -- a retention policy reads the *series*. The
+        ``("sweep",)`` default kind filter in :meth:`resolve` keeps these
+        manifests out of query routing automatically."""
+        store = store if store is not None else self.stores[0]
+        with self._mu:
+            stats = dict(self.stats)
+        payload = {
+            "collected_at": time.time(),
+            "uptime_s": round(time.monotonic() - self._t0_mono, 3),
+            "gateway": stats,
+            "artifacts": self.artifact_stats(),
+        }
+        art = store.put_json(
+            "telemetry", payload, routing={"workload": "gateway-telemetry"}
+        )
+        _LOG.info("telemetry_persisted", key=art.key,
+                  artifacts=len(payload["artifacts"]))
+        return art.key
+
+    def _maybe_persist_telemetry(self) -> None:
+        """Interval-gated :meth:`persist_telemetry` on the request path
+        (no background thread: a gateway that stops serving stops
+        snapshotting, and tests stay deterministic). Never lets a
+        telemetry failure fail the query that triggered it."""
+        iv = self.telemetry_interval
+        if iv <= 0:
+            return
+        now = time.monotonic()
+        with self._telemetry_mu:
+            if now - self._telemetry_last < iv:
+                return
+            self._telemetry_last = now
+        try:
+            self.persist_telemetry()
+        except Exception as e:  # noqa: BLE001 - advisory path, never fatal
+            _LOG.warning("telemetry_persist_failed",
+                         error=f"{type(e).__name__}: {e}")
 
 
 # ---------------------------------------------------------------------------
 # HTTP transport
 # ---------------------------------------------------------------------------
+_TRACE_ID_RE = re.compile(r"[^A-Za-z0-9_-]")
+
+
+def _clean_trace_id(raw: Optional[str]) -> str:
+    """A usable trace id from a client-supplied header value: echo it
+    (sanitized to a bounded identifier charset) or mint a fresh one."""
+    if raw:
+        tid = _TRACE_ID_RE.sub("", raw)[:64]
+        if tid:
+            return tid
+    return new_trace_id()
+
+
 class _Handler(BaseHTTPRequestHandler):
     """Maps the wire codec onto HTTP. All bodies are JSON; failures are
-    :func:`repro.service.wire.encode_error` payloads (never tracebacks)."""
+    :func:`repro.service.wire.encode_error` payloads (never tracebacks).
+
+    Every request increments per-route counters and a latency histogram
+    in the :mod:`repro.obs` registry (served right back at
+    ``GET /v1/metrics``); query routes echo/mint an ``X-Repro-Trace``
+    header, and a ``"trace": true`` request envelope opts into span
+    recording (the tree rides back in the response envelope)."""
 
     server_version = "repro-gateway/1"
     protocol_version = "HTTP/1.1"  # keep-alive: clients reuse connections
 
-    # silence the default per-request stderr line (benchmarks hammer this)
     def log_message(self, fmt, *args):  # noqa: ARG002
-        pass
+        # the stdlib's per-request stderr line, rerouted through the
+        # structured logger at DEBUG: silent by default (NullHandler /
+        # level), JSON lines under `serve --log-level debug`
+        _LOG.debug("http_access", client=self.client_address[0],
+                   line=fmt % args)
 
     @property
     def gateway(self) -> Gateway:
         return self.server.gateway  # type: ignore[attr-defined]
 
-    def _send(self, status: int, body: bytes, content_type="application/json") -> None:
+    def _route(self) -> str:
+        """Metrics label for this request's path: the known endpoint, or
+        "other" (bounded label cardinality under path scans)."""
+        path = self.path.split("?", 1)[0]
+        return path if path in _ROUTES else "other"
+
+    def _send(
+        self,
+        status: int,
+        body: bytes,
+        content_type="application/json",
+        headers: Optional[Mapping[str, str]] = None,
+    ) -> None:
         self.send_response(status)
         self.send_header("Content-Type", content_type)
         self.send_header("Content-Length", str(len(body)))
+        for name, value in (headers or {}).items():
+            self.send_header(name, value)
         if self.close_connection:
             self.send_header("Connection", "close")
         self.end_headers()
@@ -536,23 +733,86 @@ class _Handler(BaseHTTPRequestHandler):
         # one request per connection on failures: simpler client recovery
         # than reasoning about keep-alive state after an error
         self.close_connection = True
+        _M_ERRORS.labels(route=self._route(), code=code).inc()
+        _LOG.debug("request_error", route=self._route(), code=code,
+                   status=status, message=message)
         self._send(status, wire.encode_error(code, message))
 
+    def _metrics_body(self, query: str) -> Tuple[bytes, str]:
+        """The ``/v1/metrics`` payload: Prometheus text by default,
+        canonical JSON via ``?format=json`` or ``Accept:
+        application/json`` (explicit ``?format=`` wins)."""
+        fmt = (parse_qs(query).get("format") or [""])[0]
+        if not fmt:
+            accept = self.headers.get("Accept", "")
+            fmt = "json" if "application/json" in accept else "prometheus"
+        reg = _REG
+        if fmt == "json":
+            return reg.render_json(), "application/json"
+        if fmt in ("prometheus", "text"):
+            return (reg.render_prometheus(),
+                    "text/plain; version=0.0.4; charset=utf-8")
+        raise wire.WireError(
+            f"unknown metrics format {fmt!r} (want 'prometheus' or 'json')"
+        )
+
     def do_GET(self) -> None:  # noqa: N802 - BaseHTTPRequestHandler API
-        if self.path == "/v1/healthz":
-            body = json.dumps(self.gateway.health(), sort_keys=True).encode()
-            self._send(200, body)
-        elif self.path == "/v1/artifacts":
-            body = json.dumps(
-                {"v": wire.WIRE_VERSION, "artifacts": self.gateway.entries()},
-                sort_keys=True,
-            ).encode()
-            self._send(200, body)
+        split = urlsplit(self.path)
+        t0 = time.perf_counter()
+        try:
+            if split.path == "/v1/healthz":
+                body = json.dumps(self.gateway.health(), sort_keys=True).encode()
+                self._send(200, body)
+            elif split.path == "/v1/artifacts":
+                body = json.dumps(
+                    {"v": wire.WIRE_VERSION, "artifacts": self.gateway.entries()},
+                    sort_keys=True,
+                ).encode()
+                self._send(200, body)
+            elif split.path == "/v1/metrics":
+                body, content_type = self._metrics_body(split.query)
+                self._send(200, body, content_type=content_type)
+            else:
+                self._send_error(wire.ERROR_HTTP_STATUS["not_found"], "not_found",
+                                 f"no such endpoint {split.path!r}")
+        except wire.WireError as e:
+            self._send_error(wire.ERROR_HTTP_STATUS.get(e.code, 400), e.code, str(e))
+        except BrokenPipeError:
+            pass
+        except Exception as e:  # noqa: BLE001 - boundary: never leak a traceback
+            self._send_error(500, "internal", f"{type(e).__name__}: {e}")
+        finally:
+            route = self._route()
+            _M_REQUESTS.labels(route=route).inc()
+            _M_REQUEST_SECONDS.labels(route=route).observe(
+                time.perf_counter() - t0
+            )
+
+    def _answer_query(self, data: bytes) -> None:
+        """POST /v1/query: the one route with opt-in tracing. Untraced
+        requests take the exact pre-tracing encode path (byte-identity);
+        traced requests record a span tree and return it in the (additive)
+        ``trace`` envelope field, under the echoed/minted trace id."""
+        request, artifact, route_sel, traced = wire.decode_request_traced(data)
+        tid = _clean_trace_id(self.headers.get(TRACE_HEADER))
+        tree = None
+        if traced:
+            with trace("gateway.request", trace_id=tid,
+                       route="/v1/query") as root:
+                response = self.gateway.query(
+                    request, artifact=artifact, route=route_sel
+                )
+            tree = root.root_tree()  # complete only after the root closes
         else:
-            self._send_error(wire.ERROR_HTTP_STATUS["not_found"], "not_found",
-                             f"no such endpoint {self.path!r}")
+            response = self.gateway.query(
+                request, artifact=artifact, route=route_sel
+            )
+        with _M_ENCODE_SECONDS.time():
+            body = wire.encode_response(response, trace=tree)
+        self._send(200, body, headers={TRACE_HEADER: tid})
 
     def do_POST(self) -> None:  # noqa: N802
+        t0 = time.perf_counter()
         try:
             # always drain the body first: with keep-alive, unread body
             # bytes would be misparsed as the connection's next request line
@@ -565,15 +825,15 @@ class _Handler(BaseHTTPRequestHandler):
             if self.path == "/v1/query_many":
                 queries = wire.decode_request_many(data)
                 results = self.gateway.query_many(queries)
-                self._send(200, wire.encode_response_many(results))
+                tid = _clean_trace_id(self.headers.get(TRACE_HEADER))
+                self._send(200, wire.encode_response_many(results),
+                           headers={TRACE_HEADER: tid})
                 return
             if self.path != "/v1/query":
                 self._send_error(wire.ERROR_HTTP_STATUS["not_found"], "not_found",
                              f"no such endpoint {self.path!r}")
                 return
-            request, artifact, route = wire.decode_request(data)
-            response = self.gateway.query(request, artifact=artifact, route=route)
-            self._send(200, wire.encode_response(response))
+            self._answer_query(data)
         except wire.WireError as e:
             self._send_error(
                 wire.ERROR_HTTP_STATUS.get(e.code, 400), e.code, str(e)
@@ -589,6 +849,12 @@ class _Handler(BaseHTTPRequestHandler):
             pass
         except Exception as e:  # noqa: BLE001 - boundary: never leak a traceback
             self._send_error(500, "internal", f"{type(e).__name__}: {e}")
+        finally:
+            route = self._route()
+            _M_REQUESTS.labels(route=route).inc()
+            _M_REQUEST_SECONDS.labels(route=route).observe(
+                time.perf_counter() - t0
+            )
 
 
 class GatewayHTTPServer(ThreadingHTTPServer):

@@ -19,16 +19,34 @@ from __future__ import annotations
 import dataclasses
 import math
 import threading
+import time
 from collections import OrderedDict
 from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core.pareto import pareto_mask_batched
+from repro.obs.metrics import get_registry as _obs_registry
+from repro.obs.trace import span
 
 from .store import Artifact
 
 __all__ = ["QueryRequest", "QueryResponse", "QueryEngine"]
+
+# ---- observability (repro.obs; no-ops under REPRO_OBS_DISABLED=1) --------
+_REG = _obs_registry()
+_M_LRU_HITS = _REG.counter(
+    "repro_query_lru_hits_total",
+    "reduction rows served from the QueryEngine LRU (matmul skipped)",
+)
+_M_LRU_MISSES = _REG.counter(
+    "repro_query_lru_misses_total",
+    "reduction rows that had to ride the (B', C) @ (C, H) matmul",
+)
+_M_REDUCE_SECONDS = _REG.histogram(
+    "repro_query_reduce_seconds",
+    "wall time of one stacked reduction matmul over the optima matrix",
+)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -210,14 +228,19 @@ class QueryEngine:
                     hit[i] = True
                     continue
             todo.append(i)
+        _M_LRU_HITS.inc(b - len(todo))
+        _M_LRU_MISSES.inc(len(todo))
         if todo:
-            sub = fmat[todo]
-            if len(todo) == 1:
-                wt_new = (sub[0] @ self.artifact.cell_time)[None, :]
-            else:
-                wt_new = sub @ self.artifact.cell_time
-            num = sub @ self._flops  # (B',)
-            gf_new = num[:, None] / wt_new / 1.0e9
+            t0 = time.perf_counter()
+            with span("reduce.matmul", rows=len(todo)):
+                sub = fmat[todo]
+                if len(todo) == 1:
+                    wt_new = (sub[0] @ self.artifact.cell_time)[None, :]
+                else:
+                    wt_new = sub @ self.artifact.cell_time
+                num = sub @ self._flops  # (B',)
+                gf_new = num[:, None] / wt_new / 1.0e9
+            _M_REDUCE_SECONDS.observe(time.perf_counter() - t0)
             for j, i in enumerate(todo):
                 wt[i], gf[i] = wt_new[j], gf_new[j]
                 if keys[i] is not None:

@@ -50,10 +50,34 @@ from repro.core.solver import LATTICE_2D, LATTICE_3D, TileLattice
 from repro.core.timemodel import GPUSpec, MAXWELL_GPU
 from repro.core.workload import Workload, paper_workload
 
+from repro.obs.metrics import SIZE_BUCKETS, get_registry as _obs_registry
+from repro.obs.trace import span
+
 from .query import QueryEngine, QueryRequest, QueryResponse
 from .store import Artifact, ArtifactStore
 
 __all__ = ["CodesignServer", "LMServer", "server_from_artifact"]
+
+# ---- observability (repro.obs; no-ops under REPRO_OBS_DISABLED=1) --------
+_REG = _obs_registry()
+_M_BATCH_SIZE = _REG.histogram(
+    "repro_server_batch_size",
+    "microbatch flush sizes (requests per leader-stacked matmul)",
+    buckets=SIZE_BUCKETS,
+)
+_M_FOLLOWER_WAIT = _REG.histogram(
+    "repro_server_follower_wait_seconds",
+    "wall time a follower spends parked on its rendezvous slot "
+    "(leader's own window/answer time excluded)",
+)
+_M_ART_BUILDS = _REG.counter(
+    "repro_server_artifact_builds_total",
+    "miss-path sweeps run by a server (cold artifact built + persisted)",
+)
+_M_ART_LOADS = _REG.counter(
+    "repro_server_artifact_loads_total",
+    "warm artifact loads (stored sweep opened, no engine invoked)",
+)
 
 
 class _Slot:
@@ -116,15 +140,19 @@ class _BaseServer:
                     with self.store.build_lock(self.key):
                         art = self.store.get(self.key)
                         if art is None:
-                            art = self._solve()
+                            with span("artifact.build", key=self.key[:12]):
+                                art = self._solve()
                             assert art.key == self.key, (
                                 "store key drifted from server key"
                             )
                             self.stats["artifact_builds"] += 1
+                            _M_ART_BUILDS.inc()
                         else:
                             self.stats["artifact_loads"] += 1
+                            _M_ART_LOADS.inc()
                 else:
                     self.stats["artifact_loads"] += 1
+                    _M_ART_LOADS.inc()
                 self._engine = QueryEngine(art, lru_size=self.lru_size)
             return self._engine
 
@@ -142,6 +170,7 @@ class _BaseServer:
                 self.stats["queries"] += 1
                 self.stats["batches"] += 1
                 self.stats["max_batch"] = max(self.stats["max_batch"], 1)
+            _M_BATCH_SIZE.observe(1)
             return engine.query(request)
         slot = _Slot(request)
         with self._batch_mu:
@@ -162,8 +191,13 @@ class _BaseServer:
                     self.stats["queries"] += len(batch)
                     self.stats["batches"] += 1
                     self.stats["max_batch"] = max(self.stats["max_batch"], len(batch))
+                _M_BATCH_SIZE.observe(len(batch))
                 try:
-                    responses = engine.answer_many([s.request for s in batch])
+                    # NB: follower requests are answered HERE, on the
+                    # leader's thread -- span trees of traced followers
+                    # show their rendezvous wait, not this matmul
+                    with span("batch.answer", size=len(batch)):
+                        responses = engine.answer_many([s.request for s in batch])
                     for s, r in zip(batch, responses):
                         s.response = r
                 except BaseException:  # noqa: BLE001 -- isolate the bad request
@@ -175,7 +209,13 @@ class _BaseServer:
                 finally:
                     for s in batch:
                         s.event.set()
-        slot.event.wait()
+        if am_leader:
+            slot.event.wait()  # already set by the flush above
+        else:
+            t0 = time.perf_counter()
+            with span("batch.wait"):
+                slot.event.wait()
+            _M_FOLLOWER_WAIT.observe(time.perf_counter() - t0)
         if slot.error is not None:
             raise slot.error
         assert slot.response is not None
@@ -189,6 +229,7 @@ class _BaseServer:
             self.stats["queries"] += len(requests)
             self.stats["batches"] += 1
             self.stats["max_batch"] = max(self.stats["max_batch"], len(requests))
+        _M_BATCH_SIZE.observe(len(requests))
         return engine.answer_many(list(requests))
 
 
@@ -330,6 +371,7 @@ class CodesignServer(_BaseServer):
             )
         srv._engine = QueryEngine(artifact, lru_size=lru_size)
         srv.stats["artifact_loads"] += 1
+        _M_ART_LOADS.inc()
         return srv
 
 
@@ -417,6 +459,7 @@ class LMServer(_BaseServer):
             )
         srv._engine = QueryEngine(artifact, lru_size=lru_size)
         srv.stats["artifact_loads"] += 1
+        _M_ART_LOADS.inc()
         return srv
 
 

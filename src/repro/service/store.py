@@ -36,9 +36,12 @@ import os
 import shutil
 import tempfile
 import threading
+import time
 from typing import Dict, List, Optional
 
 import numpy as np
+
+from repro.obs.metrics import get_registry as _obs_registry
 
 try:  # POSIX file locks for the cross-process build path
     import fcntl
@@ -75,9 +78,12 @@ FORMAT_VERSION = 1
 #: manifest kinds one store can hold. "sweep" is the original (C, H)
 #: optima matrix (manifest + cell_time.npy + arrays.npz); "measurement"
 #: and "calibration" are manifest-only JSON artifacts written by
-#: :mod:`repro.measure` (timing runs / refitted machine parameters).
+#: :mod:`repro.measure` (timing runs / refitted machine parameters);
+#: "telemetry" is a manifest-only per-artifact hit/latency snapshot
+#: persisted by a serving gateway (:meth:`repro.service.gateway.Gateway
+#: .persist_telemetry`) so a future retention policy has data to act on.
 #: Manifests written before kinds existed read as "sweep".
-KINDS = ("sweep", "measurement", "calibration")
+KINDS = ("sweep", "measurement", "calibration", "telemetry")
 
 #: engines whose optima matrices are bit-identical share one content
 #: address: "sharded" is the same compiled program as "jax", merely
@@ -90,6 +96,23 @@ KINDS = ("sweep", "measurement", "calibration")
 #: would let a jax host's float32 matrix and a jax-less host's float64
 #: matrix share one key.
 _DIGEST_ENGINE = {"sharded": "jax"}
+
+# ---- observability (repro.obs; no-ops under REPRO_OBS_DISABLED=1) --------
+_REG = _obs_registry()
+_M_BUILDS = _REG.counter(
+    "repro_store_builds_total",
+    "artifacts committed by a staged write, by manifest kind",
+    labels=("kind",),
+)
+_M_OPENS = _REG.counter(
+    "repro_store_opens_total",
+    "successful artifact opens via ArtifactStore.get",
+)
+_M_LOCK_WAIT = _REG.histogram(
+    "repro_store_lock_wait_seconds",
+    "wall time blocked acquiring a per-key build flock (cross-process "
+    "build contention)",
+)
 
 
 def _digest_engine(engine: str, n_hw: int) -> str:
@@ -472,7 +495,9 @@ class ArtifactStore:
                 held[1] += 1
         if held is None:
             fd = os.open(path, os.O_CREAT | os.O_RDWR, 0o644)
+            t0 = time.perf_counter()
             fcntl.flock(fd, fcntl.LOCK_EX)  # may block on another process
+            _M_LOCK_WAIT.observe(time.perf_counter() - t0)
             with _HELD_LOCKS_MU:
                 _HELD_LOCKS[path] = [fd, 1]
         try:
@@ -514,6 +539,7 @@ class ArtifactStore:
                     shutil.rmtree(tmp, ignore_errors=True)
         art = self.get(key)
         assert art is not None
+        _M_BUILDS.labels(kind=art.kind).inc()  # this process staged it
         return art
 
     def has(self, key: str) -> bool:
@@ -529,6 +555,7 @@ class ArtifactStore:
         art = Artifact(path)
         if art.manifest.get("format_version") != FORMAT_VERSION:
             return None
+        _M_OPENS.inc()
         return art
 
     def put(

@@ -8,10 +8,13 @@ Everything else (the gateway's HTTP handler, the thin client, the CLI's
 functions, so the in-process objects and the wire can never drift apart:
 
 * :func:`encode_request` / :func:`decode_request` -- request envelope
-  (``{"v", "artifact", "route", "request"}``);
+  (``{"v", "artifact", "route", "request"}`` plus an optional
+  ``"trace": true`` observability opt-in, surfaced by
+  :func:`decode_request_traced`);
 * :func:`encode_response` / :func:`decode_response` -- response envelope
   (``{"v", "ok", "response"}`` on success, ``{"v", "ok", "error"}`` on
-  failure);
+  failure; a traced request's answer additionally carries ``"trace"``,
+  read back by :func:`decode_response_traced`);
 * :func:`encode_error` -- structured error payloads (``code`` +
   ``message``), never tracebacks.
 
@@ -54,10 +57,12 @@ __all__ = [
     "RemoteError",
     "encode_request",
     "decode_request",
+    "decode_request_traced",
     "encode_request_many",
     "decode_request_many",
     "encode_response",
     "decode_response",
+    "decode_response_traced",
     "encode_response_many",
     "decode_response_many",
     "encode_error",
@@ -189,11 +194,15 @@ def encode_request(
     request: QueryRequest,
     artifact: Optional[str] = None,
     route: Optional[Mapping[str, Any]] = None,
+    trace: bool = False,
 ) -> bytes:
     """Serialize one query. ``artifact`` pins a content-address key;
     ``route`` is a routing selector the gateway resolves (e.g.
     ``{"gpu": "titanx"}``); both ``None`` is valid on a one-artifact
-    gateway."""
+    gateway. ``trace=True`` asks the gateway to record spans for this
+    request and return the span tree in the response envelope (see
+    ``docs/observability.md``); the field is omitted entirely when false
+    so traced-capable clients emit byte-identical untraced requests."""
     body: Dict[str, Any] = {
         "v": WIRE_VERSION,
         "request": dataclasses.asdict(request),
@@ -202,6 +211,8 @@ def encode_request(
         body["artifact"] = str(artifact)
     if route:
         body["route"] = dict(route)
+    if trace:
+        body["trace"] = True
     return _dumps(body)
 
 
@@ -213,12 +224,26 @@ def decode_request(data: bytes) -> Tuple[QueryRequest, Optional[str], Optional[d
     purpose: a silently dropped field would answer a different question
     than the client asked).
     """
+    request, artifact, route, _ = decode_request_traced(data)
+    return request, artifact, route
+
+
+def decode_request_traced(
+    data: bytes,
+) -> Tuple[QueryRequest, Optional[str], Optional[dict], bool]:
+    """Like :func:`decode_request` but also surfaces the envelope's
+    optional ``trace`` flag as a fourth element (False when absent).
+    The HTTP handler decodes through this; in-process callers that don't
+    care keep the 3-tuple :func:`decode_request`."""
     obj = _loads(data)
     _check_version(obj, "request envelope")
-    unknown = set(obj) - {"v", "artifact", "route", "request"}
+    unknown = set(obj) - {"v", "artifact", "route", "request", "trace"}
     if unknown:
         raise WireError(f"unknown envelope fields {sorted(unknown)}")
-    return _decode_query(obj)
+    traced = obj.get("trace", False)
+    if not isinstance(traced, bool):
+        raise WireError("'trace' must be a boolean")
+    return (*_decode_query(obj), traced)
 
 
 def _decode_query(obj: dict) -> Tuple[QueryRequest, Optional[str], Optional[dict]]:
@@ -343,17 +368,37 @@ def _response_payload(response: QueryResponse) -> Dict[str, Any]:
     return r
 
 
-def encode_response(response: QueryResponse) -> bytes:
+def encode_response(
+    response: QueryResponse, trace: Optional[Mapping[str, Any]] = None
+) -> bytes:
     """Serialize a success answer. Deterministic (canonical JSON), so two
     equal responses always encode to identical bytes -- the property the
-    gateway's byte-identity acceptance test leans on."""
-    return _dumps({"v": WIRE_VERSION, "ok": True, "response": _response_payload(response)})
+    gateway's byte-identity acceptance test leans on. ``trace`` (a span
+    tree from :meth:`repro.obs.trace.Span.root_tree`) is attached as an
+    additive envelope field only when the request opted in; with
+    ``trace=None`` the bytes are exactly the pre-tracing encoding, which
+    is what preserves byte-identity for untraced requests."""
+    body: Dict[str, Any] = {
+        "v": WIRE_VERSION, "ok": True, "response": _response_payload(response)
+    }
+    if trace is not None:
+        body["trace"] = dict(trace)
+    return _dumps(body)
 
 
 def decode_response(data: bytes, http_status: int = 0) -> QueryResponse:
     """Bytes -> :class:`QueryResponse`. A structured error envelope raises
     :class:`RemoteError`; unknown *response* fields are ignored (additive
     server evolution within a wire version)."""
+    return decode_response_traced(data, http_status)[0]
+
+
+def decode_response_traced(
+    data: bytes, http_status: int = 0
+) -> Tuple[QueryResponse, Optional[dict]]:
+    """Like :func:`decode_response` but also returns the envelope's
+    ``trace`` span tree (None when the request didn't opt in -- or the
+    server predates tracing; the field is additive either way)."""
     obj = _loads(data)
     _check_version(obj, "response envelope")
     if not obj.get("ok"):
@@ -363,7 +408,10 @@ def decode_response(data: bytes, http_status: int = 0) -> QueryResponse:
             str(err.get("message", "(no message)")),
             http_status,
         )
-    return _parse_response_payload(obj.get("response"))
+    trace = obj.get("trace")
+    if trace is not None and not isinstance(trace, dict):
+        trace = None
+    return _parse_response_payload(obj.get("response")), trace
 
 
 def _parse_response_payload(r: Any) -> QueryResponse:

@@ -1,0 +1,417 @@
+"""repro.obs: metrics registry thread-safety and exporters, span trees,
+structured logging, and the instrumented serving stack end to end --
+trace-id propagation over real HTTP, per-artifact hit stats, the
+``/v1/metrics`` endpoint, telemetry artifact round trips, and the
+byte-identity guarantee for untraced answers."""
+
+import dataclasses
+import io
+import json
+import logging as pylogging
+import os
+import sys
+import tempfile
+import threading
+
+import pytest
+
+# benchmarks/ is a repo-root namespace package: on sys.path under
+# `python -m pytest` (cwd prepended) but not under a bare `pytest`
+sys.path.insert(0, os.path.abspath(os.path.join(os.path.dirname(__file__), os.pardir)))
+from benchmarks.common import validate_trajectory_entry  # noqa: E402
+from repro.core import MAXWELL, enumerate_hw_space
+from repro.core.timemodel import MAXWELL_GPU, TITANX_GPU
+from repro.core.workload import paper_workload
+from repro.obs import configure_logging, get_logger
+from repro.obs.metrics import Registry, get_registry, set_disabled
+from repro.obs.trace import current_trace_id, span, trace
+from repro.service import (
+    ArtifactStore,
+    CodesignServer,
+    Gateway,
+    GatewayClient,
+    QueryRequest,
+    serve_http,
+    wire,
+)
+
+STRIDE = 64
+STENCILS = ["heat2d", "jacobi2d"]
+
+
+@pytest.fixture(scope="module")
+def fleet():
+    """Two artifacts (gtx980 + titanx) behind a live instrumented HTTP
+    gateway -- the same shape as the test_gateway fixture, built once."""
+    root = tempfile.mkdtemp(prefix="obsstore-")
+    store = ArtifactStore(root)
+    wl = paper_workload(STENCILS)
+    hw = enumerate_hw_space(MAXWELL, max_area=650.0).downsample(STRIDE)
+    keys = {}
+    for gpu in (MAXWELL_GPU, TITANX_GPU):
+        srv = CodesignServer(
+            store, workload=wl, gpu=gpu, hw=hw, engine="numpy", batch_window=0.0
+        )
+        srv.ensure_artifact()
+        keys[gpu.name] = srv.key
+    gw = Gateway(root, pool_size=2, batch_window=0.0)
+    httpd = serve_http(gw)
+    threading.Thread(target=httpd.serve_forever, daemon=True).start()
+    url = "http://%s:%d" % httpd.server_address[:2]
+    yield store, keys, gw, url
+    httpd.shutdown()
+    httpd.server_close()
+
+
+def _req(**kw):
+    kw.setdefault("freqs", {"heat2d": 1.0})
+    kw.setdefault("use_cache", False)
+    return QueryRequest(**kw)
+
+
+def _counter_value(snapshot, name, **labels):
+    """Counter value for one label assignment in a snapshot dict (0.0 when
+    the child was never minted)."""
+    for s in snapshot.get(name, {}).get("samples", []):
+        if s["labels"] == {k: str(v) for k, v in labels.items()}:
+            return s["value"]
+    return 0.0
+
+
+# ---------------------------------------------------------------------------
+# metrics registry
+# ---------------------------------------------------------------------------
+def test_counter_and_gauge_basics():
+    reg = Registry(disabled=False)
+    c = reg.counter("c_total", "help", labels=("route",))
+    c.labels(route="/a").inc()
+    c.labels(route="/a").inc(2.5)
+    c.labels(route="/b").inc()
+    assert c.labels(route="/a").value == 3.5
+    with pytest.raises(ValueError, match=">= 0"):
+        c.labels(route="/a").inc(-1)
+    with pytest.raises(ValueError, match="wants labels"):
+        c.labels(path="/a")
+    g = reg.gauge("g")
+    g.set(7)
+    g.dec(2)
+    assert g.value == 5.0
+    # re-registration: idempotent when identical, error on conflict
+    assert reg.counter("c_total", "help", labels=("route",)) is c
+    with pytest.raises(ValueError, match="already registered"):
+        reg.gauge("c_total")
+
+
+def test_family_get_never_mints_children():
+    reg = Registry(disabled=False)
+    c = reg.counter("c_total", labels=("k",))
+    assert c.get(k="x") is None
+    assert reg.snapshot()["c_total"]["samples"] == []
+    c.labels(k="x").inc()
+    assert c.get(k="x").value == 1.0
+
+
+def test_histogram_bucket_placement():
+    reg = Registry(disabled=False)
+    h = reg.histogram("h", buckets=(1.0, 2.0, 4.0))
+    for v in (0.5, 1.0, 1.5, 4.0, 99.0):  # 99 -> +Inf overflow
+        h.observe(v)
+    (s,) = reg.snapshot()["h"]["samples"]
+    assert s["count"] == 5 and s["sum"] == pytest.approx(106.0)
+    assert [b["count"] for b in s["buckets"]] == [2, 3, 4]  # cumulative
+    with pytest.raises(ValueError, match="strictly increasing"):
+        reg.histogram("bad", buckets=(1.0, 1.0))
+
+
+def test_metrics_thread_safety_exact_counts():
+    reg = Registry(disabled=False)
+    c = reg.counter("c_total", labels=("t",))
+    h = reg.histogram("h", buckets=(0.5,))
+    n_threads, n_iter = 8, 10_000
+
+    def work(i):
+        child = c.labels(t=i % 2)
+        for _ in range(n_iter):
+            child.inc()
+            h.observe(1.0)
+
+    threads = [threading.Thread(target=work, args=(i,)) for i in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    total = c.labels(t=0).value + c.labels(t=1).value
+    assert total == n_threads * n_iter  # a lost += would shave counts
+    assert h.count == n_threads * n_iter
+
+
+def test_reset_zeroes_but_preserves_child_identity():
+    reg = Registry(disabled=False)
+    c = reg.counter("c_total", labels=("k",))
+    child = c.labels(k="x")
+    child.inc(5)
+    reg.reset()
+    assert c.labels(k="x") is child  # held references keep working
+    assert child.value == 0.0
+    child.inc()
+    assert child.value == 1.0
+
+
+def test_exporter_goldens():
+    reg = Registry(disabled=False)
+    reg.counter("req_total", "requests", labels=("route",)).labels(
+        route="/v1/query"
+    ).inc(3)
+    reg.gauge("pool", "occupancy").set(2)
+    h = reg.histogram("lat_seconds", "latency", buckets=(0.1, 1.0))
+    h.observe(0.05)
+    h.observe(5.0)
+    assert reg.render_prometheus() == (
+        b"# HELP lat_seconds latency\n"
+        b"# TYPE lat_seconds histogram\n"
+        b'lat_seconds_bucket{le="0.1"} 1\n'
+        b'lat_seconds_bucket{le="1"} 1\n'
+        b'lat_seconds_bucket{le="+Inf"} 2\n'
+        b"lat_seconds_sum 5.05\n"
+        b"lat_seconds_count 2\n"
+        b"# HELP pool occupancy\n"
+        b"# TYPE pool gauge\n"
+        b"pool 2\n"
+        b"# HELP req_total requests\n"
+        b"# TYPE req_total counter\n"
+        b'req_total{route="/v1/query"} 3\n'
+    )
+    snap = json.loads(reg.render_json())
+    assert snap["req_total"]["samples"] == [
+        {"labels": {"route": "/v1/query"}, "value": 3.0}
+    ]
+    # canonical: equal state renders equal bytes
+    assert reg.render_json() == reg.render_json()
+
+
+def test_disabled_mode_drops_everything():
+    reg = get_registry()
+    c = reg.counter("test_obs_disabled_total")
+    before = c.value
+    set_disabled(True)
+    try:
+        c.inc()
+        assert c.value == before
+    finally:
+        set_disabled(None)  # back to the REPRO_OBS_DISABLED env default
+    c.inc()
+    assert c.value == before + 1
+
+
+# ---------------------------------------------------------------------------
+# spans
+# ---------------------------------------------------------------------------
+def test_span_nesting_and_tree_shape():
+    with trace("root", trace_id="tid1", route="/x") as root:
+        assert current_trace_id() == "tid1"
+        with span("a", artifact="k1"):
+            with span("a1"):
+                pass
+        with span("b"):
+            pass
+    t = root.root_tree()
+    assert t["trace_id"] == "tid1"
+    assert t["name"] == "root" and t["attrs"] == {"route": "/x"}
+    assert [c["name"] for c in t["children"]] == ["a", "b"]
+    assert [c["name"] for c in t["children"][0]["children"]] == ["a1"]
+    assert t["dur_us"] >= t["children"][0]["dur_us"] >= 0
+    assert all(c["t_offset_us"] >= 0 for c in t["children"])
+    assert json.dumps(t)  # plain JSON-ready dict
+
+
+def test_span_without_trace_is_noop():
+    assert current_trace_id() is None
+    with span("orphan") as s:
+        assert s is None
+    assert current_trace_id() is None
+
+
+# ---------------------------------------------------------------------------
+# structured logging
+# ---------------------------------------------------------------------------
+def test_structured_logging_json_lines_and_trace_id():
+    buf = io.StringIO()
+    configure_logging("debug", stream=buf)
+    try:
+        log = get_logger("gateway")  # re-rooted to repro.gateway
+        log.info("request", route="/v1/query", status=200)
+        with trace("t", trace_id="tid42"):
+            log.debug("inner")
+        lines = [json.loads(ln) for ln in buf.getvalue().splitlines()]
+        assert lines[0]["event"] == "request"
+        assert lines[0]["level"] == "info"
+        assert lines[0]["logger"] == "repro.gateway"
+        assert lines[0]["route"] == "/v1/query" and lines[0]["status"] == 200
+        assert "trace_id" not in lines[0]  # nothing was tracing
+        assert lines[1]["trace_id"] == "tid42"
+        # reconfiguring replaces the handler instead of stacking a second
+        configure_logging("debug", stream=buf)
+        root = pylogging.getLogger("repro")
+        assert sum(
+            getattr(h, "_repro_obs_handler", False) for h in root.handlers
+        ) == 1
+    finally:
+        root = pylogging.getLogger("repro")
+        for h in list(root.handlers):
+            if getattr(h, "_repro_obs_handler", False):
+                root.removeHandler(h)
+        root.setLevel(pylogging.NOTSET)
+
+
+# ---------------------------------------------------------------------------
+# instrumented serving stack over real HTTP
+# ---------------------------------------------------------------------------
+def test_untraced_answers_carry_no_trace_field(fleet):
+    _, keys, _, url = fleet
+    client = GatewayClient(url)
+    body = client.query_bytes(_req(), artifact=keys["gtx980"])
+    env = json.loads(body)
+    assert "trace" not in env  # byte-identity guarantee: tracing is opt-in
+    assert client.query_bytes(_req(), artifact=keys["gtx980"]) == body
+    # a minted trace id still rides the response header
+    assert len(client.last_trace_id) == 16
+
+
+def test_traced_query_span_tree_over_http(fleet):
+    _, keys, _, url = fleet
+    client = GatewayClient(url)
+    plain = client.query(_req(), artifact=keys["titanx"])
+    resp, tree = client.query_traced(
+        _req(), artifact=keys["titanx"], trace_id="test-trace-1"
+    )
+    # same answer, field for field -- the envelope grew, the payload didn't
+    assert dataclasses.replace(resp, cached=False) == dataclasses.replace(
+        plain, cached=False
+    )
+    assert client.last_trace_id == "test-trace-1"
+    assert tree["trace_id"] == "test-trace-1"
+    assert tree["name"] == "gateway.request"
+    names = [c["name"] for c in tree["children"]]
+    assert names == ["resolve", "pool", "dispatch"]
+    assert tree["dur_us"] >= sum(c["dur_us"] for c in tree["children"])
+
+
+def test_trace_id_header_is_sanitized(fleet):
+    _, keys, _, url = fleet
+    client = GatewayClient(url)
+    _, tree = client.query_traced(
+        _req(), artifact=keys["gtx980"], trace_id="abc !@#$ def\tghi" + "x" * 100
+    )
+    tid = tree["trace_id"]
+    assert tid.startswith("abcdefghi") and len(tid) == 64
+    assert client.last_trace_id == tid
+
+
+def test_trace_envelope_field_must_be_bool():
+    with pytest.raises(wire.WireError, match="'trace' must be a boolean"):
+        wire.decode_request_traced(b'{"v": 1, "request": {}, "trace": "yes"}')
+
+
+def test_metrics_endpoint_counts_requests(fleet):
+    _, keys, _, url = fleet
+    client = GatewayClient(url)
+    before = client.metrics()
+    n0 = _counter_value(before, "repro_gateway_requests_total", route="/v1/query")
+    h0 = _counter_value(
+        before, "repro_gateway_artifact_requests_total", artifact=keys["gtx980"]
+    )
+    n_queries = 4
+    for _ in range(n_queries):
+        client.query(_req(), artifact=keys["gtx980"])
+    after = client.metrics()
+    n1 = _counter_value(after, "repro_gateway_requests_total", route="/v1/query")
+    h1 = _counter_value(
+        after, "repro_gateway_artifact_requests_total", artifact=keys["gtx980"]
+    )
+    assert n1 - n0 == n_queries
+    assert h1 - h0 == n_queries
+    # prometheus rendering of the same registry
+    text = client.metrics("prometheus")
+    assert "# TYPE repro_gateway_requests_total counter" in text
+    assert 'route="/v1/query"' in text
+    # unknown format is a structured 400, not a traceback
+    with pytest.raises(wire.RemoteError):
+        client.metrics("xml")
+
+
+def test_query_lru_metrics_over_http(fleet):
+    _, keys, _, url = fleet
+    client = GatewayClient(url)
+    req = QueryRequest(freqs={"jacobi2d": 1.0}, use_cache=True)
+    client.query(req, artifact=keys["gtx980"])  # prime the LRU
+    before = client.metrics()
+    client.query(req, artifact=keys["gtx980"])
+    after = client.metrics()
+    hits = lambda snap: _counter_value(snap, "repro_query_lru_hits_total")  # noqa: E731
+    assert hits(after) - hits(before) == 1
+
+
+def test_artifact_rows_carry_hit_stats(fleet):
+    _, keys, gw, url = fleet
+    client = GatewayClient(url)
+    rows = {r["key"]: r for r in client.artifacts()}
+    before = rows[keys["titanx"]].get("hits", 0)
+    client.query(_req(), artifact=keys["titanx"])
+    rows = {r["key"]: r for r in client.artifacts()}
+    row = rows[keys["titanx"]]
+    assert row["hits"] == before + 1
+    assert isinstance(row["last_access"], float)
+    stats = gw.artifact_stats()
+    assert stats[keys["titanx"]]["hits"] == before + 1
+    assert stats[keys["titanx"]]["query_seconds_count"] >= 1
+
+
+def test_healthz_reports_uptime_and_pool(fleet):
+    _, _, _, url = fleet
+    h = GatewayClient(url).health()
+    assert h["ok"] is True
+    assert h["uptime_s"] >= 0.0
+    assert h["telemetry_interval"] == 0.0
+    assert h["artifacts"] == 2
+
+
+def test_telemetry_artifact_round_trip(fleet):
+    store, keys, gw, url = fleet
+    client = GatewayClient(url)
+    client.query(_req(), artifact=keys["gtx980"])
+    key = gw.persist_telemetry()
+    art = store.get(key)
+    assert art.manifest["kind"] == "telemetry"
+    assert art.manifest["routing"]["workload"] == "gateway-telemetry"
+    payload = art.payload
+    assert payload["gateway"]["requests"] >= 1
+    assert payload["artifacts"][keys["gtx980"]]["hits"] >= 1
+    assert payload["uptime_s"] >= 0.0 and payload["collected_at"] > 0
+    # telemetry artifacts are manifest-only metadata: a rescan indexes
+    # them (they appear in /v1/artifacts) but the default ("sweep",) kind
+    # filter keeps them out of query routing -- a selector query is still
+    # unambiguous with the snapshot sitting in the same store
+    n = client.refresh()
+    assert n == 3
+    resp = client.query(_req(), route={"gpu": "titanx"})
+    assert resp.artifact_key == keys["titanx"]
+
+
+# ---------------------------------------------------------------------------
+# trajectory schema gate
+# ---------------------------------------------------------------------------
+def test_validate_trajectory_entry():
+    validate_trajectory_entry(
+        {"suite": "service", "cold_s": 1.2, "warm_qps": 900,
+         "engines_total_s": {"jax": 0.5}}
+    )
+    with pytest.raises(TypeError):
+        validate_trajectory_entry(["not", "a", "dict"])
+    with pytest.raises(ValueError, match="suite"):
+        validate_trajectory_entry({"cold_s": 1.0})
+    with pytest.raises(ValueError, match="cold_s"):
+        validate_trajectory_entry({"suite": "x", "cold_s": float("inf")})
+    with pytest.raises(ValueError, match="nested.t_s"):
+        validate_trajectory_entry({"suite": "x", "nested": {"t_s": "1.2"}})
+    with pytest.raises(ValueError, match="warm_qps"):
+        validate_trajectory_entry({"suite": "x", "warm_qps": True})
