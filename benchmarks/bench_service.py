@@ -215,6 +215,27 @@ def run() -> None:
                     )
         finally:
             set_disabled(None)  # back to whatever the env says
+
+        # (e) resilience tax: the same batched round trip with the
+        # admission-control + breaker + deadline layer live (the default
+        # permissive GatewayResilience bundle) vs resilience=None. The
+        # happy path through the layer is a handful of no-op checks
+        # (inflight counter, disabled buckets, one contextvar read), so
+        # this A/B holds it to the same <5% ceiling as observability.
+        res_bundle = gw.resilience
+        t_res = {True: float("inf"), False: float("inf")}
+        try:
+            for _ in range(4):
+                for on in (True, False):
+                    gw.resilience = res_bundle if on else None
+                    t0 = time.perf_counter()
+                    res_results = client.query_many(batch_http)
+                    t_res[on] = min(t_res[on], time.perf_counter() - t0)
+                    assert all(
+                        not isinstance(x, Exception) for x in res_results
+                    )
+        finally:
+            gw.resilience = res_bundle
     finally:
         httpd.shutdown()
         httpd.server_close()
@@ -251,6 +272,20 @@ def run() -> None:
         f"(on {qps_obs_on:.0f} q/s, off {qps_obs_off:.0f} q/s)"
     )
 
+    qps_res_on = len(batch_http) / t_res[True]
+    qps_res_off = len(batch_http) / t_res[False]
+    res_overhead = 1.0 - qps_res_on / qps_res_off
+    emit(
+        "service_resilience_overhead", t_res[True] / len(batch_http) * 1e6,
+        f"admission+deadline+breaker on {qps_res_on:.0f} q/s vs off "
+        f"{qps_res_off:.0f} q/s ({res_overhead * 100:+.1f}% tax; "
+        f"acceptance ceiling 5%)",
+    )
+    assert res_overhead < 0.05, (
+        f"resilience tax {res_overhead * 100:.1f}% >= 5% "
+        f"(on {qps_res_on:.0f} q/s, off {qps_res_off:.0f} q/s)"
+    )
+
     append_trajectory(
         "sweep",
         {
@@ -269,5 +304,8 @@ def run() -> None:
             "obs_on_qps": round(qps_obs_on, 1),
             "obs_off_qps": round(qps_obs_off, 1),
             "obs_overhead_pct": round(overhead * 100, 2),
+            "resilience_on_qps": round(qps_res_on, 1),
+            "resilience_off_qps": round(qps_res_off, 1),
+            "resilience_overhead_pct": round(res_overhead * 100, 2),
         },
     )

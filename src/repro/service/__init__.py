@@ -19,11 +19,27 @@ paper §V.B). This package turns that observation into a serving system:
 * :mod:`repro.service.wire`    -- the versioned HTTP/JSON codec (requests,
   responses, structured errors) -- see ``docs/serving.md``;
 * :mod:`repro.service.client`  -- thin ``urllib`` client for a gateway;
+* :mod:`repro.service.resilience` -- deadlines, admission control (token
+  buckets + load shedding), circuit breakers and the client retry policy
+  -- see ``docs/resilience.md``;
+* :mod:`repro.service.faults`  -- deterministic fault injection behind the
+  chaos harness (``scripts/chaos_smoke.py``);
 * :mod:`repro.service.cli`     -- ``python -m repro.service.cli
   query|build|ls|serve`` (``query --url`` goes over HTTP).
 """
 
+from . import faults  # noqa: F401
 from .client import GatewayClient  # noqa: F401
+from .errors import ERROR_HTTP_STATUS  # noqa: F401
+from .resilience import (  # noqa: F401
+    CircuitOpenError,
+    Deadline,
+    DeadlineExceededError,
+    GatewayResilience,
+    RateLimitedError,
+    RetryPolicy,
+    ShedError,
+)
 from .gateway import (  # noqa: F401
     AmbiguousRouteError,
     AmbiguousWorkloadError,
@@ -40,6 +56,7 @@ from .store import (  # noqa: F401
     KINDS,
     Artifact,
     ArtifactStore,
+    BuildLockTimeoutError,
     artifact_spec,
     spec_key,
 )

@@ -359,9 +359,17 @@ def cmd_query(args) -> None:
 
 
 def cmd_build(args) -> None:
+    from .errors import GatewayError
+
     srv = _server(args)
     t0 = time.perf_counter()
-    srv.ensure_artifact()
+    try:
+        srv.ensure_artifact()
+    except GatewayError as e:
+        # structured serving-layer failures (e.g. build_lock_timeout when
+        # another process holds the build flock past REPRO_LOCK_TIMEOUT_S):
+        # one line + exit 2, never a traceback
+        raise _die(f"{e.code}: {e}")
     gpu_name = srv.gpu_name if hasattr(srv, "gpu_name") else srv.gpu.name
     print(f"artifact {srv.key}: "
           f"{'already stored' if srv.stats['artifact_loads'] else 'built'} "
@@ -433,12 +441,25 @@ def cmd_serve(args) -> None:
     roots = ([args.store] if args.store else []) + (args.root or [])
     if not roots:
         roots = [DEFAULT_STORE]
+    if args.no_resilience:
+        resilience = None
+    else:
+        from .resilience import GatewayResilience
+
+        resilience = GatewayResilience(
+            global_rate=args.rate_limit,
+            client_rate=args.client_rate_limit,
+            max_inflight=args.max_inflight,
+            breaker_threshold=args.breaker_threshold,
+            breaker_cooldown_s=args.breaker_cooldown,
+        )
     try:
         gw = Gateway(
             roots,
             pool_size=args.pool_size,
             batch_window=args.batch_window,
             telemetry_interval=args.telemetry_interval,
+            resilience=resilience,
         )
     except FileNotFoundError as e:
         raise _die(str(e))
@@ -539,6 +560,29 @@ def main(argv=None) -> None:
                    help="structured-log verbosity on stderr (JSON lines; "
                         "debug includes per-request access logs; default "
                         "warning = quiet)")
+    s.add_argument("--rate-limit", type=float, default=0.0, metavar="QPS",
+                   help="global admission rate for the query routes in "
+                        "requests/s (0 = unlimited); over-budget requests "
+                        "get HTTP 429 + Retry-After")
+    s.add_argument("--client-rate-limit", type=float, default=0.0,
+                   metavar="QPS",
+                   help="per-client admission rate (clients keyed by the "
+                        "X-Repro-Client header, else remote address; "
+                        "0 = unlimited)")
+    s.add_argument("--max-inflight", type=int, default=128, metavar="N",
+                   help="shed watermark: concurrent query requests beyond "
+                        "this get HTTP 503 code=shed (0 = unlimited; "
+                        "default %(default)s)")
+    s.add_argument("--breaker-threshold", type=int, default=5, metavar="N",
+                   help="consecutive raw failures that open a per-artifact "
+                        "circuit breaker (default %(default)s)")
+    s.add_argument("--breaker-cooldown", type=float, default=30.0,
+                   metavar="SECONDS",
+                   help="open-circuit cooldown before a half-open probe "
+                        "(default %(default)s)")
+    s.add_argument("--no-resilience", action="store_true",
+                   help="disable admission control and circuit breakers "
+                        "entirely (deadlines still apply)")
     s.add_argument("--telemetry-interval", type=float, default=0.0,
                    help="seconds between persisted per-artifact telemetry "
                         "snapshots (kind: 'telemetry' store artifacts; "

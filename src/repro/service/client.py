@@ -31,28 +31,79 @@ with the server's error ``code`` (``unknown_artifact``, ``bad_request``,
 ``urllib.error.URLError`` (the exception type callers already handle).
 The client is thread-compatible (an internal lock serializes requests);
 use one client per thread for parallelism.
+
+**Retries** (``docs/resilience.md``): by default the client retries
+*idempotent* failures -- HTTP 429/503 (the gateway's ``rate_limited`` /
+``shed`` / ``circuit_open`` / ``build_lock_timeout`` answers, honoring
+``Retry-After``) and connection resets (the request provably never
+produced a response) -- under a bounded exponential-backoff-with-jitter
+:class:`~repro.service.resilience.RetryPolicy`. Timeouts are **never**
+retried: a timed-out request may still be executing server-side, and
+re-sending would double both the wait and the server's work. Pass
+``retry=None`` to disable, or your own policy to tune; ``sleep`` and
+``rng`` are injectable so tests assert the backoff schedule without
+sleeping.
 """
 
 from __future__ import annotations
 
 import http.client
 import json
+import random
 import threading
+import time
 import urllib.error
 from typing import Any, Dict, List, Mapping, Optional, Sequence, Tuple, Union
 from urllib.parse import urlsplit
 
 from . import wire
 from .query import QueryRequest, QueryResponse
+from .resilience import RetryPolicy
 from repro.obs.trace import TRACE_HEADER
 
 __all__ = ["GatewayClient"]
 
+#: HTTP statuses the retry policy may re-send: the gateway only answers
+#: these for requests it REFUSED to start (rate_limited / shed /
+#: circuit_open / build_lock_timeout), so a retry can never double work.
+_RETRYABLE_STATUSES = frozenset({429, 503})
+
+
+def _retryable_exception(exc: BaseException) -> bool:
+    """True for transport failures where the request provably never got a
+    response: connection reset / aborted / broken pipe (including
+    ``http.client.RemoteDisconnected``, a ``ConnectionResetError``
+    subclass). Timeouts are excluded by construction -- ``TimeoutError``
+    is not in this family -- as is ``ConnectionRefusedError`` (the server
+    is down; backoff won't bring it up and callers should fail fast)."""
+    return isinstance(
+        exc, (ConnectionResetError, ConnectionAbortedError, BrokenPipeError)
+    ) and not isinstance(exc, TimeoutError)
+
 
 class GatewayClient:
-    """Client for one gateway base URL (e.g. ``http://host:port``)."""
+    """Client for one gateway base URL (e.g. ``http://host:port``).
 
-    def __init__(self, base_url: str, timeout: float = 30.0, keepalive: bool = True):
+    Parameters
+    ----------
+    retry:
+        The :class:`~repro.service.resilience.RetryPolicy` for idempotent
+        failures (the default sentinel builds the stock policy: 3 retries,
+        50ms base, 2s cap, full jitter); ``None`` disables retries.
+    sleep / rng:
+        Injection points for the backoff sleep and jitter randomness
+        (tests pass a recording fake and a seeded ``random.Random``).
+    """
+
+    def __init__(
+        self,
+        base_url: str,
+        timeout: float = 30.0,
+        keepalive: bool = True,
+        retry: Union[RetryPolicy, None, str] = "default",
+        sleep=time.sleep,
+        rng: Optional[random.Random] = None,
+    ):
         parts = urlsplit(base_url if "//" in base_url else f"http://{base_url}")
         if parts.scheme not in ("http", "https"):
             raise ValueError(f"unsupported URL scheme {parts.scheme!r} in {base_url!r}")
@@ -72,6 +123,12 @@ class GatewayClient:
         self._mu = threading.Lock()
         self._last_status = 0  # HTTP status of the most recent call
         self._last_trace_id = ""  # X-Repro-Trace echoed by the most recent call
+        if retry == "default":
+            retry = RetryPolicy()
+        self.retry: Optional[RetryPolicy] = retry
+        self._sleep = sleep
+        self._rng = rng if rng is not None else random.Random()
+        self.stats: Dict[str, int] = {"retries": 0}
 
     # ---- transport --------------------------------------------------------
     def _drop(self) -> None:
@@ -104,39 +161,94 @@ class GatewayClient:
         raised) so the decoder can surface the server's structured code.
         The status is *returned* rather than read back from shared state:
         two threads sharing a client must never pair one request's body
-        with the other's status."""
+        with the other's status.
+
+        This is also where the retry policy lives: idempotent failures
+        (connection reset before any response; 429/503 refusals, honoring
+        the ``Retry-After`` hint) re-send under bounded backoff. Every
+        request is re-sent from its original ``body`` bytes, so a retried
+        answer is byte-identical to a first-try answer."""
         method = "POST" if body is not None else "GET"
         hdrs = {"Content-Type": "application/json", **(headers or {})}
+        policy = self.retry
         with self._mu:
-            for attempt in (0, 1):
-                reused = self._conn is not None
-                conn = self._conn or self._conn_cls(
-                    self._host, self._port, timeout=self.timeout
-                )
-                self._conn = None
+            tries = 0  # policy retries consumed (stale-socket retry is free)
+            while True:
                 try:
-                    conn.request(method, self._path_prefix + path, body, hdrs)
-                    resp = conn.getresponse()
-                    data = resp.read()
-                    self._last_status = resp.status
-                    self._last_trace_id = resp.getheader(TRACE_HEADER, "")
-                except (http.client.HTTPException, OSError) as e:
-                    try:
-                        conn.close()
-                    except OSError:
-                        pass
-                    # retry covers ONLY a stale keep-alive socket (server
-                    # closed its side: reset/EOF before a response). A
-                    # timeout is not staleness -- re-sending would double
-                    # both the effective timeout and the server's work.
-                    if reused and attempt == 0 and not isinstance(e, TimeoutError):
+                    data, status, retry_after = self._exchange(
+                        method, path, body, hdrs
+                    )
+                except urllib.error.URLError as e:
+                    reason = e.reason if isinstance(
+                        getattr(e, "reason", None), BaseException
+                    ) else e
+                    if (
+                        policy is not None
+                        and tries < policy.max_retries
+                        and _retryable_exception(reason)
+                    ):
+                        tries += 1
+                        self.stats["retries"] += 1
+                        self._sleep(policy.delay(tries, self._rng))
                         continue
-                    raise urllib.error.URLError(e) from e
-                if self.keepalive and not resp.will_close:
-                    self._conn = conn
-                else:
+                    raise
+                if (
+                    policy is not None
+                    and status in _RETRYABLE_STATUSES
+                    and tries < policy.max_retries
+                ):
+                    tries += 1
+                    self.stats["retries"] += 1
+                    self._sleep(
+                        policy.delay(tries, self._rng, retry_after_s=retry_after)
+                    )
+                    continue
+                return data, status
+
+    def _exchange(
+        self,
+        method: str,
+        path: str,
+        body: Optional[bytes],
+        hdrs: Dict[str, str],
+    ) -> Tuple[bytes, int, Optional[float]]:
+        """One HTTP exchange (with the free stale-keep-alive retry);
+        returns ``(body, status, Retry-After seconds or None)``. Caller
+        holds ``_mu``."""
+        for attempt in (0, 1):
+            reused = self._conn is not None
+            conn = self._conn or self._conn_cls(
+                self._host, self._port, timeout=self.timeout
+            )
+            self._conn = None
+            try:
+                conn.request(method, self._path_prefix + path, body, hdrs)
+                resp = conn.getresponse()
+                data = resp.read()
+                self._last_status = resp.status
+                self._last_trace_id = resp.getheader(TRACE_HEADER, "")
+            except (http.client.HTTPException, OSError) as e:
+                try:
                     conn.close()
-                return data, resp.status
+                except OSError:
+                    pass
+                # this retry covers ONLY a stale keep-alive socket (server
+                # closed its side: reset/EOF before a response). A
+                # timeout is not staleness -- re-sending would double
+                # both the effective timeout and the server's work.
+                if reused and attempt == 0 and not isinstance(e, TimeoutError):
+                    continue
+                raise urllib.error.URLError(e) from e
+            if self.keepalive and not resp.will_close:
+                self._conn = conn
+            else:
+                conn.close()
+            ra_raw = resp.getheader("Retry-After")
+            try:
+                retry_after = float(ra_raw) if ra_raw else None
+            except ValueError:
+                retry_after = None  # HTTP-date form: fall back to backoff
+            return data, resp.status, retry_after
         raise AssertionError("unreachable")  # pragma: no cover
 
     def _http(self, path: str, body: Optional[bytes] = None) -> bytes:
@@ -171,11 +283,18 @@ class GatewayClient:
         request: QueryRequest,
         artifact: Optional[str] = None,
         route: Optional[Mapping[str, Any]] = None,
+        deadline_ms: Optional[float] = None,
     ) -> QueryResponse:
         """Answer one request over HTTP; raises
-        :class:`~repro.service.wire.RemoteError` on structured failures."""
+        :class:`~repro.service.wire.RemoteError` on structured failures.
+        ``deadline_ms`` rides the request envelope: the gateway abandons
+        the request (HTTP 504, code ``deadline_exceeded``) once the budget
+        is spent. The budget is per attempt, not across retries."""
         body, status = self._request(
-            "/v1/query", wire.encode_request(request, artifact=artifact, route=route)
+            "/v1/query",
+            wire.encode_request(
+                request, artifact=artifact, route=route, deadline_ms=deadline_ms
+            ),
         )
         return wire.decode_response(body, http_status=status)
 
@@ -232,6 +351,7 @@ class GatewayClient:
         ],
         artifact: Optional[str] = None,
         route: Optional[Mapping[str, Any]] = None,
+        deadline_ms: Optional[float] = None,
     ) -> List[Union[QueryResponse, wire.RemoteError]]:
         """Answer N queries in one HTTP round trip (``POST
         /v1/query_many``). Each element is a bare :class:`QueryRequest`
@@ -254,7 +374,8 @@ class GatewayClient:
             chunk = triples[lo : lo + wire.MAX_BATCH]
             try:
                 body, status = self._request(
-                    "/v1/query_many", wire.encode_request_many(chunk)
+                    "/v1/query_many",
+                    wire.encode_request_many(chunk, deadline_ms=deadline_ms),
                 )
                 out.extend(wire.decode_response_many(body, http_status=status))
             except wire.RemoteError as e:

@@ -1,0 +1,68 @@
+"""Shared structured-error vocabulary of the serving stack.
+
+This module is a dependency **leaf**: it imports nothing from the rest of
+:mod:`repro.service`, so every layer -- the wire codec, the store, the
+per-artifact servers, the gateway, and the resilience machinery -- can
+name the same error base class and the same code -> HTTP status registry
+without import cycles (the store cannot import :mod:`.wire`, which
+transitively imports the store; both can import this).
+
+Two things live here:
+
+* :data:`ERROR_HTTP_STATUS` -- THE code -> HTTP status registry. The
+  gateway's exception classes and HTTP handler answer with these
+  statuses, and the batched client-side decoder re-derives per-element
+  statuses from it (a ``/v1/query_many`` element arrives under the
+  envelope's own HTTP 200, but its ``RemoteError`` must classify exactly
+  like its single-query twin). One table, both directions: adding an
+  error code means adding it here. Re-exported as
+  ``repro.service.wire.ERROR_HTTP_STATUS`` for clients.
+* :class:`GatewayError` -- the base of every structured server-side
+  failure. Each subclass pins its wire ``code`` and reads its
+  ``http_status`` from the registry, so the two can never disagree;
+  ``tests/test_wire_errors.py`` walks the subclass tree and asserts it.
+
+The full error-code table (what each code means, when it is returned,
+whether a client should retry) is documented in ``docs/serving.md`` and
+``docs/resilience.md``.
+"""
+
+from __future__ import annotations
+
+__all__ = ["ERROR_HTTP_STATUS", "GatewayError"]
+
+ERROR_HTTP_STATUS = {
+    "bad_request": 400,
+    "unsupported_version": 400,
+    "wrong_artifact_kind": 400,
+    "ambiguous_workload": 400,
+    "unknown_artifact": 404,
+    "not_found": 404,
+    "ambiguous_route": 409,
+    # resilience layer (docs/resilience.md): 429/503 are retryable with
+    # backoff (the response carries Retry-After); 504 means the caller's
+    # own deadline_ms budget ran out -- retrying with the same budget
+    # would just burn it again.
+    "rate_limited": 429,
+    "shed": 503,
+    "circuit_open": 503,
+    "build_lock_timeout": 503,
+    "deadline_exceeded": 504,
+    "internal": 500,
+}
+
+
+class GatewayError(Exception):
+    """Base of the serving stack's structured failures; every subclass
+    pins the wire error ``code``, and the HTTP status comes from the
+    shared :data:`ERROR_HTTP_STATUS` registry (one table serves the
+    server side and the batched client-side decoder, so the two can
+    never disagree about how a code classifies).
+
+    Subclasses that are *retryable after a delay* additionally carry a
+    ``retry_after_s`` attribute; the HTTP handler surfaces it as a
+    ``Retry-After`` header and :class:`repro.service.client
+    .GatewayClient`'s retry policy honors it."""
+
+    code = "internal"
+    http_status = ERROR_HTTP_STATUS["internal"]

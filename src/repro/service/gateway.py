@@ -48,7 +48,10 @@ Wire format, error codes and a curl-able quickstart are documented in
 
 from __future__ import annotations
 
+import contextlib
+import contextvars
 import json
+import math
 import os
 import re
 import threading
@@ -62,9 +65,18 @@ from repro.obs import get_logger
 from repro.obs.metrics import get_registry as _obs_registry
 from repro.obs.trace import TRACE_HEADER, new_trace_id, span, trace
 
-from . import wire
+from . import faults, wire
+from .errors import GatewayError
 from .query import QueryRequest, QueryResponse
-from .server import CodesignServer, server_from_artifact
+from .resilience import (
+    CLIENT_HEADER,
+    DEADLINE_HEADER,
+    Deadline,
+    GatewayResilience,
+    check_deadline,
+    deadline_scope,
+)
+from .server import CodesignServer, _M_BATCH_POISON, server_from_artifact
 from .store import ArtifactStore
 
 __all__ = [
@@ -139,15 +151,15 @@ _ROUTES = (
 )
 
 
-class GatewayError(Exception):
-    """Base of the gateway's structured failures; every subclass pins the
-    wire error ``code``, and the HTTP status comes from the shared
-    :data:`wire.ERROR_HTTP_STATUS` registry (one table serves the server
-    side here and the batched client-side decoder, so the two can never
-    disagree about how a code classifies)."""
-
-    code = "internal"
-    http_status = wire.ERROR_HTTP_STATUS["internal"]
+# GatewayError itself now lives in the dependency-leaf
+# :mod:`repro.service.errors` (so the store and resilience layers can
+# raise structured failures without importing this module); it is
+# re-exported here -- ``repro.service.gateway.GatewayError`` stays the
+# public spelling. Every subclass pins the wire error ``code``, and the
+# HTTP status comes from the shared :data:`wire.ERROR_HTTP_STATUS`
+# registry (one table serves the server side here and the batched
+# client-side decoder, so the two can never disagree about how a code
+# classifies).
 
 
 class UnknownArtifactError(GatewayError):
@@ -207,6 +219,13 @@ class Gateway:
         (:meth:`persist_telemetry`); ``0`` (the default) disables
         persistence entirely -- stored artifact counts then never drift
         under test/smoke query load.
+    resilience:
+        The :class:`~repro.service.resilience.GatewayResilience` bundle
+        (admission control + per-artifact circuit breakers). The default
+        sentinel ``"default"`` builds one with permissive settings (no
+        rate limits, inflight cap 128, breaker threshold 5); pass
+        ``None`` to disable resilience entirely (deadlines still
+        propagate -- they are a per-request contract, not a knob).
     """
 
     def __init__(
@@ -216,6 +235,7 @@ class Gateway:
         batch_window: float = 0.002,
         lru_size: int = 256,
         telemetry_interval: float = 0.0,
+        resilience: Union[GatewayResilience, None, str] = "default",
     ):
         if isinstance(roots, (str, os.PathLike)):
             roots = [roots]
@@ -228,6 +248,9 @@ class Gateway:
         self.batch_window = float(batch_window)
         self.lru_size = int(lru_size)
         self.telemetry_interval = float(telemetry_interval)
+        if resilience == "default":
+            resilience = GatewayResilience()
+        self.resilience: Optional[GatewayResilience] = resilience
         self._t0_mono = time.monotonic()  # uptime basis (NTP-step immune)
         self._telemetry_mu = threading.Lock()
         self._telemetry_last = time.monotonic()
@@ -448,13 +471,28 @@ class Gateway:
                 "sweep artifacts serve queries"
             )
         store: ArtifactStore = row["store"]
-        art = store.get(key)
-        if art is None:  # deleted between index and query
-            self.refresh()
-            raise UnknownArtifactError(f"artifact {key!r} vanished from {store.root}")
-        srv = server_from_artifact(
-            store, art, batch_window=self.batch_window, lru_size=self.lru_size
-        )
+        # the expensive, failure-prone part of a pool miss (store I/O +
+        # server build: mmap, JSON, integrity check) runs under this
+        # artifact's circuit breaker: after `threshold` consecutive raw
+        # failures (corrupt file, flaky filesystem) the breaker opens and
+        # callers fail fast with `circuit_open` instead of re-paying the
+        # broken build until a half-open probe succeeds. GatewayError
+        # outcomes (unknown/kind/deadline) pass through untouched and do
+        # NOT count as breaker failures -- a client's tiny deadline must
+        # never open the circuit for everyone else.
+        res = self.resilience
+        breaker = res.breaker(key) if res is not None else None
+        ctx = breaker.call() if breaker is not None else contextlib.nullcontext()
+        with ctx:
+            art = store.get(key)
+            if art is None:  # deleted between index and query
+                self.refresh()
+                raise UnknownArtifactError(
+                    f"artifact {key!r} vanished from {store.root}"
+                )
+            srv = server_from_artifact(
+                store, art, batch_window=self.batch_window, lru_size=self.lru_size
+            )
         with self._mu:
             # a racing thread may have built it meanwhile; keep the first
             winner = self._pool.setdefault(key, srv)
@@ -485,8 +523,10 @@ class Gateway:
         any concurrent caller of the same artifact) and answer it."""
         with self._mu:
             self.stats["requests"] += 1
+        check_deadline("gateway.resolve")
         with span("resolve"):
             key = self.resolve(artifact, route)
+        check_deadline("gateway.pool")
         with span("pool", artifact=key[:12]):
             srv = self.server_for(key)
         t0 = time.perf_counter()
@@ -520,6 +560,10 @@ class Gateway:
         rescanned = False
         for i, (request, artifact, route) in enumerate(queries):
             try:
+                # the deadline classifies per element (the batch contract:
+                # errors are pairs, never a blanket failure) -- a spent
+                # budget fails each remaining element fast, right here
+                check_deadline("gateway.resolve")
                 key = self.resolve(artifact, route, rescan=not rescanned)
             except UnknownArtifactError as e:
                 rescanned = True
@@ -557,7 +601,16 @@ class Gateway:
                 for i, resp in zip(idxs, srv.query_many([queries[i][0] for i in idxs])):
                     results[i] = resp
                 self._note_artifact(key, time.perf_counter() - t0, n=len(idxs))
-            except Exception:  # noqa: BLE001 - isolate the poison pill
+            except GatewayError as e:
+                # a classified outcome for the whole stacked call (e.g.
+                # deadline_exceeded): every element gets the code -- solo
+                # retries would just re-pay a budget that is already spent
+                for i in idxs:
+                    results[i] = (e.code, str(e))
+            except Exception as flush_err:  # noqa: BLE001 - isolate the poison pill
+                _M_BATCH_POISON.inc()
+                _LOG.warning("batch_poisoned", artifact=key[:12], size=len(idxs),
+                             error=f"{type(flush_err).__name__}: {flush_err}")
                 for i in idxs:
                     try:
                         results[i] = srv.query(queries[i][0])
@@ -586,7 +639,13 @@ class Gateway:
             workers = min(len(groups), self.pool_size)
             with ThreadPoolExecutor(max_workers=workers) as pool:
                 for key, idxs in groups.items():
-                    pool.submit(answer_group, key, idxs)
+                    # contextvars (the request deadline) do not cross into
+                    # executor threads by themselves; each submission gets
+                    # its own Context copy (one Context cannot run
+                    # concurrently in two threads)
+                    pool.submit(
+                        contextvars.copy_context().run, answer_group, key, idxs
+                    )
         self._maybe_persist_telemetry()
         return results
 
@@ -729,14 +788,48 @@ class _Handler(BaseHTTPRequestHandler):
         self.end_headers()
         self.wfile.write(body)
 
-    def _send_error(self, status: int, code: str, message: str) -> None:
+    def _send_error(
+        self,
+        status: int,
+        code: str,
+        message: str,
+        headers: Optional[Mapping[str, str]] = None,
+    ) -> None:
         # one request per connection on failures: simpler client recovery
         # than reasoning about keep-alive state after an error
         self.close_connection = True
         _M_ERRORS.labels(route=self._route(), code=code).inc()
         _LOG.debug("request_error", route=self._route(), code=code,
                    status=status, message=message)
-        self._send(status, wire.encode_error(code, message))
+        self._send(status, wire.encode_error(code, message), headers=headers)
+
+    def _send_gateway_error(self, e: GatewayError) -> None:
+        """A structured GatewayError onto the wire, carrying Retry-After
+        when the failure advertises a backoff hint (429/503 family)."""
+        headers = None
+        retry_after = getattr(e, "retry_after_s", None)
+        if retry_after is not None:
+            headers = {"Retry-After": str(max(1, math.ceil(retry_after)))}
+        self._send_error(e.http_status, e.code, str(e), headers=headers)
+
+    def _request_deadline(self, env_ms: Optional[float]) -> Optional[Deadline]:
+        """The effective request deadline: the ``X-Repro-Deadline-Ms``
+        header, the envelope ``deadline_ms``, or (when both are present)
+        the tighter of the two. None when the request carries neither."""
+        raw = self.headers.get(DEADLINE_HEADER)
+        ms: Optional[float] = None
+        if raw is not None:
+            try:
+                ms = float(raw)
+            except ValueError:
+                raise wire.WireError(
+                    f"invalid {DEADLINE_HEADER} header {raw!r} "
+                    "(want a positive number of milliseconds)"
+                ) from None
+            ms = wire._check_deadline_ms(ms)
+        if env_ms is not None:
+            ms = env_ms if ms is None else min(ms, env_ms)
+        return None if ms is None else Deadline(ms)
 
     def _metrics_body(self, query: str) -> Tuple[bytes, str]:
         """The ``/v1/metrics`` payload: Prometheus text by default,
@@ -793,23 +886,38 @@ class _Handler(BaseHTTPRequestHandler):
         requests take the exact pre-tracing encode path (byte-identity);
         traced requests record a span tree and return it in the (additive)
         ``trace`` envelope field, under the echoed/minted trace id."""
-        request, artifact, route_sel, traced = wire.decode_request_traced(data)
+        request, artifact, route_sel, traced, env_ms = \
+            wire.decode_request_full(data)
+        deadline = self._request_deadline(env_ms)
         tid = _clean_trace_id(self.headers.get(TRACE_HEADER))
         tree = None
-        if traced:
-            with trace("gateway.request", trace_id=tid,
-                       route="/v1/query") as root:
+        with deadline_scope(deadline):
+            if traced:
+                with trace("gateway.request", trace_id=tid,
+                           route="/v1/query") as root:
+                    response = self.gateway.query(
+                        request, artifact=artifact, route=route_sel
+                    )
+                tree = root.root_tree()  # complete only after the root closes
+            else:
                 response = self.gateway.query(
                     request, artifact=artifact, route=route_sel
                 )
-            tree = root.root_tree()  # complete only after the root closes
-        else:
-            response = self.gateway.query(
-                request, artifact=artifact, route=route_sel
-            )
         with _M_ENCODE_SECONDS.time():
             body = wire.encode_response(response, trace=tree)
         self._send(200, body, headers={TRACE_HEADER: tid})
+
+    def _answer_query_many(self, data: bytes) -> None:
+        """POST /v1/query_many: an envelope-level deadline bounds the
+        whole batch (elements past the budget classify as
+        ``deadline_exceeded`` pairs; the batch itself still answers 200)."""
+        queries, env_ms = wire.decode_request_many_full(data)
+        deadline = self._request_deadline(env_ms)
+        with deadline_scope(deadline):
+            results = self.gateway.query_many(queries)
+        tid = _clean_trace_id(self.headers.get(TRACE_HEADER))
+        self._send(200, wire.encode_response_many(results),
+                   headers={TRACE_HEADER: tid})
 
     def do_POST(self) -> None:  # noqa: N802
         t0 = time.perf_counter()
@@ -818,28 +926,40 @@ class _Handler(BaseHTTPRequestHandler):
             # bytes would be misparsed as the connection's next request line
             length = int(self.headers.get("Content-Length", 0))
             data = self.rfile.read(length)
+            if faults.should_drop("gateway.drop_socket"):
+                # chaos hook: abandon the connection without a response --
+                # the client sees a reset/EOF (the retryable failure its
+                # RetryPolicy is built for). Armed only via fault injection.
+                self.close_connection = True
+                return
             if self.path == "/v1/refresh":
                 n = self.gateway.refresh()
                 self._send(200, json.dumps({"ok": True, "artifacts": n}).encode())
                 return
-            if self.path == "/v1/query_many":
-                queries = wire.decode_request_many(data)
-                results = self.gateway.query_many(queries)
-                tid = _clean_trace_id(self.headers.get(TRACE_HEADER))
-                self._send(200, wire.encode_response_many(results),
-                           headers={TRACE_HEADER: tid})
-                return
-            if self.path != "/v1/query":
+            if self.path not in ("/v1/query", "/v1/query_many"):
                 self._send_error(wire.ERROR_HTTP_STATUS["not_found"], "not_found",
                              f"no such endpoint {self.path!r}")
                 return
-            self._answer_query(data)
+            # admission control guards only the query routes (health,
+            # metrics and refresh must stay reachable under overload --
+            # they are how an operator sees the overload)
+            res = self.gateway.resilience
+            if res is not None:
+                client = self.headers.get(CLIENT_HEADER) or self.client_address[0]
+                admit = res.admission.admit(client)
+            else:
+                admit = contextlib.nullcontext()
+            with admit:
+                if self.path == "/v1/query_many":
+                    self._answer_query_many(data)
+                else:
+                    self._answer_query(data)
         except wire.WireError as e:
             self._send_error(
                 wire.ERROR_HTTP_STATUS.get(e.code, 400), e.code, str(e)
             )
         except GatewayError as e:
-            self._send_error(e.http_status, e.code, str(e))
+            self._send_gateway_error(e)
         except (KeyError, ValueError) as e:
             # engine-level rejections (unknown stencil, bad shapes, bad
             # selector names): the request is at fault, not the server

@@ -50,15 +50,19 @@ from repro.core.solver import LATTICE_2D, LATTICE_3D, TileLattice
 from repro.core.timemodel import GPUSpec, MAXWELL_GPU
 from repro.core.workload import Workload, paper_workload
 
+from repro.obs import get_logger
 from repro.obs.metrics import SIZE_BUCKETS, get_registry as _obs_registry
 from repro.obs.trace import span
 
+from . import faults
 from .query import QueryEngine, QueryRequest, QueryResponse
+from .resilience import check_deadline, remaining_s
 from .store import Artifact, ArtifactStore
 
 __all__ = ["CodesignServer", "LMServer", "server_from_artifact"]
 
 # ---- observability (repro.obs; no-ops under REPRO_OBS_DISABLED=1) --------
+_LOG = get_logger("repro.server")
 _REG = _obs_registry()
 _M_BATCH_SIZE = _REG.histogram(
     "repro_server_batch_size",
@@ -77,6 +81,12 @@ _M_ART_BUILDS = _REG.counter(
 _M_ART_LOADS = _REG.counter(
     "repro_server_artifact_loads_total",
     "warm artifact loads (stored sweep opened, no engine invoked)",
+)
+_M_BATCH_POISON = _REG.counter(
+    "repro_server_batch_poison_total",
+    "microbatch flushes that failed whole and fell back to per-request "
+    "solo retries (one poison-pill request degrading its batchmates "
+    "from one stacked matmul to N solo answers)",
 )
 
 
@@ -133,13 +143,18 @@ class _BaseServer:
                 art = self.store.get(self.key)
                 if art is None:
                     # cross-process dedup: a second process racing to the
-                    # same key blocks here, then finds the winner's
-                    # artifact on the re-check instead of re-sweeping
-                    # (build_lock is reentrant, so store.put inside _solve
-                    # can re-acquire it around the staged write).
+                    # same key blocks here (bounded by the lock timeout
+                    # and any in-flight request deadline), then finds the
+                    # winner's artifact on the re-check instead of
+                    # re-sweeping (build_lock is reentrant, so store.put
+                    # inside _solve can re-acquire it around the staged
+                    # write).
                     with self.store.build_lock(self.key):
                         art = self.store.get(self.key)
                         if art is None:
+                            # a request whose budget is already spent must
+                            # not kick off a minutes-long sweep
+                            check_deadline("server.build")
                             with span("artifact.build", key=self.key[:12]):
                                 art = self._solve()
                             assert art.key == self.key, (
@@ -164,6 +179,7 @@ class _BaseServer:
     # ---- queries ----------------------------------------------------------
     def query(self, request: QueryRequest) -> QueryResponse:
         """Answer one request; concurrent callers microbatch automatically."""
+        check_deadline("server.query")
         engine = self.ensure_artifact()
         if self.batch_window <= 0:
             with self._batch_mu:
@@ -180,7 +196,12 @@ class _BaseServer:
                 self._leader_active = True
         if am_leader:
             try:
-                time.sleep(self.batch_window)  # rendezvous: followers pile in
+                # rendezvous: followers pile in. A leader carrying a
+                # deadline never sleeps past its own remaining budget.
+                time.sleep(
+                    min(self.batch_window,
+                        remaining_s(default=self.batch_window))
+                )
             finally:
                 # even if the sleep is interrupted (KeyboardInterrupt), the
                 # leadership MUST be handed back and every collected
@@ -196,16 +217,32 @@ class _BaseServer:
                     # NB: follower requests are answered HERE, on the
                     # leader's thread -- span trees of traced followers
                     # show their rendezvous wait, not this matmul
+                    faults.fire("server.batch")
                     with span("batch.answer", size=len(batch)):
                         responses = engine.answer_many([s.request for s in batch])
                     for s, r in zip(batch, responses):
                         s.response = r
-                except BaseException:  # noqa: BLE001 -- isolate the bad request
-                    for s in batch:  # retry solo so one poison pill can't
-                        try:  # take down its batchmates
+                except BaseException as flush_err:  # noqa: BLE001 -- isolate
+                    # the poison pill: retry each request solo so one bad
+                    # request can't take down its batchmates. Counted and
+                    # logged (this path used to be silent -- a fleet
+                    # quietly degrading from stacked matmuls to N solo
+                    # answers looked identical to a healthy one).
+                    _M_BATCH_POISON.inc()
+                    _LOG.warning(
+                        "batch_poisoned", size=len(batch),
+                        error=f"{type(flush_err).__name__}: {flush_err}",
+                    )
+                    for idx, s in enumerate(batch):
+                        try:
                             s.response = engine.query(s.request)
                         except BaseException as e:  # noqa: BLE001
                             s.error = e
+                            _LOG.warning(
+                                "batch_poison_request", request_id=idx,
+                                request=repr(s.request)[:200],
+                                error=f"{type(e).__name__}: {e}",
+                            )
                 finally:
                     for s in batch:
                         s.event.set()
@@ -224,7 +261,9 @@ class _BaseServer:
     def query_many(self, requests: Sequence[QueryRequest]) -> List[QueryResponse]:
         """Batch entry point for a caller that already has its requests in
         hand (no rendezvous window needed)."""
+        check_deadline("server.query")
         engine = self.ensure_artifact()
+        faults.fire("server.batch")
         with self._batch_mu:
             self.stats["queries"] += len(requests)
             self.stats["batches"] += 1

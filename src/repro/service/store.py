@@ -61,15 +61,27 @@ from repro.core.solver import LATTICE_2D, LATTICE_3D, TileLattice
 from repro.core.timemodel import GPUSpec
 from repro.core.workload import Workload
 
+from . import faults
+from .errors import ERROR_HTTP_STATUS, GatewayError
+from .resilience import check_deadline, remaining_s
+
 __all__ = [
     "FORMAT_VERSION",
     "KINDS",
     "Artifact",
     "ArtifactStore",
+    "BuildLockTimeoutError",
     "artifact_spec",
     "lm_artifact_spec",
     "spec_key",
 ]
+
+#: default bound on how long :meth:`ArtifactStore.build_lock` waits for
+#: another process's flock before failing structured (seconds). Generous
+#: on purpose -- a full-space sweep legitimately takes minutes -- and
+#: overridable per store (``lock_timeout_s=``), per acquisition
+#: (``timeout_s=``), or process-wide via ``REPRO_LOCK_TIMEOUT_S``.
+DEFAULT_LOCK_TIMEOUT_S = 600.0
 
 #: bump when the on-disk layout or the solver semantics change; old
 #: artifacts then read as misses (the store rebuilds, never mis-serves).
@@ -113,6 +125,24 @@ _M_LOCK_WAIT = _REG.histogram(
     "wall time blocked acquiring a per-key build flock (cross-process "
     "build contention)",
 )
+_M_LOCK_TIMEOUTS = _REG.counter(
+    "repro_store_build_lock_timeouts_total",
+    "build-lock acquisitions abandoned at their wait bound "
+    "(structured build_lock_timeout errors instead of hung threads)",
+)
+
+
+class BuildLockTimeoutError(GatewayError):
+    """Another process held a key's build flock past the caller's wait
+    bound (HTTP 503, wire code ``build_lock_timeout``). Retryable: the
+    holder is usually a legitimate builder that will finish."""
+
+    code = "build_lock_timeout"
+    http_status = ERROR_HTTP_STATUS["build_lock_timeout"]
+
+    def __init__(self, message: str, retry_after_s: float = 5.0):
+        super().__init__(message)
+        self.retry_after_s = float(retry_after_s)
 
 
 def _digest_engine(engine: str, n_hw: int) -> str:
@@ -439,12 +469,20 @@ class ArtifactStore:
     the default keeps the build-path ergonomics of ``put`` into a fresh
     directory."""
 
-    def __init__(self, root: str, create: bool = True):
+    def __init__(self, root: str, create: bool = True,
+                 lock_timeout_s: Optional[float] = None):
         self.root = os.path.abspath(root)
         if create:
             os.makedirs(self.root, exist_ok=True)
         elif not os.path.isdir(self.root):
             raise FileNotFoundError(f"artifact store root {self.root!r} does not exist")
+        if lock_timeout_s is None:
+            lock_timeout_s = float(
+                os.environ.get("REPRO_LOCK_TIMEOUT_S", DEFAULT_LOCK_TIMEOUT_S)
+            )
+        if lock_timeout_s <= 0:
+            raise ValueError("lock_timeout_s must be > 0")
+        self.lock_timeout_s = lock_timeout_s
 
     # ---- keys -------------------------------------------------------------
     def key_for(
@@ -470,7 +508,7 @@ class ArtifactStore:
         return os.path.join(self.root, key)
 
     @contextlib.contextmanager
-    def build_lock(self, key: str):
+    def build_lock(self, key: str, timeout_s: Optional[float] = None):
         """Exclusive **cross-process** lock for one key's build/staged-write.
 
         Two processes building the same artifact key serialize here: the
@@ -484,7 +522,16 @@ class ArtifactStore:
         unlinking a locked path would hand a third process a fresh inode
         and break the mutual exclusion. No-op where ``fcntl`` is
         unavailable (non-POSIX), which degrades to the previous
-        benign-rename behavior."""
+        benign-rename behavior.
+
+        The wait is **bounded** (a wedged or merely slow holder must not
+        park a request thread forever): ``timeout_s`` (default the
+        store's ``lock_timeout_s``; generous, because a legitimate
+        builder takes minutes) -- capped further by the in-flight
+        request's remaining deadline budget when one is active
+        (``docs/resilience.md``). Exhausting the bound raises a
+        structured :class:`BuildLockTimeoutError` (wire code
+        ``build_lock_timeout``) instead of hanging."""
         if fcntl is None:
             yield
             return
@@ -494,9 +541,39 @@ class ArtifactStore:
             if held is not None:
                 held[1] += 1
         if held is None:
+            budget = self.lock_timeout_s if timeout_s is None else float(timeout_s)
+            cap = remaining_s()  # in-flight request deadline, if any
+            deadline_capped = cap is not None and cap < budget
+            if deadline_capped:
+                budget = cap
             fd = os.open(path, os.O_CREAT | os.O_RDWR, 0o644)
             t0 = time.perf_counter()
-            fcntl.flock(fd, fcntl.LOCK_EX)  # may block on another process
+            try:
+                faults.fire("store.lock")
+                while True:
+                    try:
+                        # non-blocking + poll, never LOCK_EX: an
+                        # uninterruptible blocking flock is exactly the
+                        # unbounded wait this method exists to prevent
+                        fcntl.flock(fd, fcntl.LOCK_EX | fcntl.LOCK_NB)
+                        break
+                    except (BlockingIOError, InterruptedError):
+                        waited = time.perf_counter() - t0
+                        if waited >= budget:
+                            _M_LOCK_TIMEOUTS.inc()
+                            why = ("request deadline budget"
+                                   if deadline_capped else "wait bound")
+                            raise BuildLockTimeoutError(
+                                f"build lock for key {key[:12]}... still "
+                                f"held by another process after "
+                                f"{waited:.1f}s ({why} {budget:.1f}s); "
+                                f"the holder is likely building this "
+                                f"artifact -- retry later"
+                            )
+                        time.sleep(min(0.01, max(budget - waited, 0.001)))
+            except BaseException:
+                os.close(fd)
+                raise
             _M_LOCK_WAIT.observe(time.perf_counter() - t0)
             with _HELD_LOCKS_MU:
                 _HELD_LOCKS[path] = [fd, 1]
@@ -549,6 +626,11 @@ class ArtifactStore:
     def get(self, key: str) -> Optional[Artifact]:
         """None on miss OR format-version mismatch (stale artifacts are
         invisible, never mis-served)."""
+        # resilience hooks: the chaos harness injects open latency /
+        # load exceptions here, and a request whose deadline budget is
+        # already spent fails fast instead of paying the open
+        faults.fire("store.open")
+        check_deadline("store.open")
         path = self._path(key)
         if not os.path.exists(os.path.join(path, "manifest.json")):
             return None

@@ -8,9 +8,10 @@ Everything else (the gateway's HTTP handler, the thin client, the CLI's
 functions, so the in-process objects and the wire can never drift apart:
 
 * :func:`encode_request` / :func:`decode_request` -- request envelope
-  (``{"v", "artifact", "route", "request"}`` plus an optional
-  ``"trace": true`` observability opt-in, surfaced by
-  :func:`decode_request_traced`);
+  (``{"v", "artifact", "route", "request"}`` plus two optional fields:
+  a ``"trace": true`` observability opt-in and a ``"deadline_ms"`` time
+  budget, surfaced by :func:`decode_request_traced` /
+  :func:`decode_request_full`);
 * :func:`encode_response` / :func:`decode_response` -- response envelope
   (``{"v", "ok", "response"}`` on success, ``{"v", "ok", "error"}`` on
   failure; a traced request's answer additionally carries ``"trace"``,
@@ -47,6 +48,7 @@ from typing import Any, Dict, Mapping, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
+from .errors import ERROR_HTTP_STATUS  # noqa: F401  (re-export: THE registry)
 from .query import QueryRequest, QueryResponse
 
 __all__ = [
@@ -58,8 +60,10 @@ __all__ = [
     "encode_request",
     "decode_request",
     "decode_request_traced",
+    "decode_request_full",
     "encode_request_many",
     "decode_request_many",
+    "decode_request_many_full",
     "encode_response",
     "decode_response",
     "decode_response_traced",
@@ -79,23 +83,11 @@ WIRE_VERSION = 1
 #: not a throughput ceiling -- clients chunk above it.
 MAX_BATCH = 1024
 
-#: THE code -> HTTP status registry: the gateway's exception classes and
-#: HTTP handler answer with these statuses, and the batched decoder
-#: re-derives per-element statuses from it (a /v1/query_many element
-#: arrives under the envelope's own HTTP 200, but its RemoteError must
-#: classify exactly like its single-query twin -- callers branch on
-#: ``http_status == 404`` etc.). One table, both directions: adding an
-#: error code means adding it here.
-ERROR_HTTP_STATUS = {
-    "bad_request": 400,
-    "unsupported_version": 400,
-    "wrong_artifact_kind": 400,
-    "ambiguous_workload": 400,
-    "unknown_artifact": 404,
-    "not_found": 404,
-    "ambiguous_route": 409,
-    "internal": 500,
-}
+# ERROR_HTTP_STATUS -- THE code -> HTTP status registry -- is defined in
+# the dependency-leaf :mod:`repro.service.errors` (the store needs it too
+# and cannot import this module) and re-exported here unchanged: clients
+# keep reading ``wire.ERROR_HTTP_STATUS``. One table, both directions:
+# adding an error code means adding it THERE.
 
 #: request fields a v1 server accepts, mirroring QueryRequest exactly.
 _REQUEST_FIELDS = frozenset(f.name for f in dataclasses.fields(QueryRequest))
@@ -195,14 +187,20 @@ def encode_request(
     artifact: Optional[str] = None,
     route: Optional[Mapping[str, Any]] = None,
     trace: bool = False,
+    deadline_ms: Optional[float] = None,
 ) -> bytes:
     """Serialize one query. ``artifact`` pins a content-address key;
     ``route`` is a routing selector the gateway resolves (e.g.
     ``{"gpu": "titanx"}``); both ``None`` is valid on a one-artifact
     gateway. ``trace=True`` asks the gateway to record spans for this
     request and return the span tree in the response envelope (see
-    ``docs/observability.md``); the field is omitted entirely when false
-    so traced-capable clients emit byte-identical untraced requests."""
+    ``docs/observability.md``); ``deadline_ms`` is the caller's total
+    time budget -- the gateway fails stages past it with a structured
+    ``deadline_exceeded`` instead of piling on (``docs/resilience.md``).
+    Both fields are omitted entirely when unset so capable clients emit
+    byte-identical plain requests (and old servers, which reject unknown
+    envelope fields, only ever see the fields the caller actually
+    used)."""
     body: Dict[str, Any] = {
         "v": WIRE_VERSION,
         "request": dataclasses.asdict(request),
@@ -213,7 +211,25 @@ def encode_request(
         body["route"] = dict(route)
     if trace:
         body["trace"] = True
+    if deadline_ms is not None:
+        body["deadline_ms"] = _check_deadline_ms(deadline_ms)
     return _dumps(body)
+
+
+def _check_deadline_ms(value: Any) -> float:
+    """Validate a ``deadline_ms`` budget (either side of the wire):
+    a positive finite number, or WireError."""
+    if isinstance(value, bool) or not isinstance(value, (int, float)):
+        raise WireError(
+            f"'deadline_ms' must be a positive number of milliseconds, "
+            f"got {type(value).__name__}"
+        )
+    value = float(value)
+    if not math.isfinite(value) or value <= 0:
+        raise WireError(
+            f"'deadline_ms' must be a positive finite number, got {value!r}"
+        )
+    return value
 
 
 def decode_request(data: bytes) -> Tuple[QueryRequest, Optional[str], Optional[dict]]:
@@ -233,17 +249,30 @@ def decode_request_traced(
 ) -> Tuple[QueryRequest, Optional[str], Optional[dict], bool]:
     """Like :func:`decode_request` but also surfaces the envelope's
     optional ``trace`` flag as a fourth element (False when absent).
-    The HTTP handler decodes through this; in-process callers that don't
-    care keep the 3-tuple :func:`decode_request`."""
+    In-process callers that don't care keep the 3-tuple
+    :func:`decode_request`."""
+    return decode_request_full(data)[:4]
+
+
+def decode_request_full(
+    data: bytes,
+) -> Tuple[QueryRequest, Optional[str], Optional[dict], bool, Optional[float]]:
+    """The whole v1 request envelope: ``(request, artifact, route,
+    traced, deadline_ms)``. The HTTP handler decodes through this;
+    ``deadline_ms`` is None when the caller set no budget."""
     obj = _loads(data)
     _check_version(obj, "request envelope")
-    unknown = set(obj) - {"v", "artifact", "route", "request", "trace"}
+    unknown = set(obj) - {"v", "artifact", "route", "request", "trace",
+                          "deadline_ms"}
     if unknown:
         raise WireError(f"unknown envelope fields {sorted(unknown)}")
     traced = obj.get("trace", False)
     if not isinstance(traced, bool):
         raise WireError("'trace' must be a boolean")
-    return (*_decode_query(obj), traced)
+    deadline_ms = obj.get("deadline_ms")
+    if deadline_ms is not None:
+        deadline_ms = _check_deadline_ms(deadline_ms)
+    return (*_decode_query(obj), traced, deadline_ms)
 
 
 def _decode_query(obj: dict) -> Tuple[QueryRequest, Optional[str], Optional[dict]]:
@@ -292,10 +321,13 @@ def encode_request_many(
     queries: Sequence[
         Tuple[QueryRequest, Optional[str], Optional[Mapping[str, Any]]]
     ],
+    deadline_ms: Optional[float] = None,
 ) -> bytes:
     """Serialize a ``POST /v1/query_many`` envelope: each element is a
     ``(request, artifact, route)`` triple exactly as :func:`encode_request`
-    takes them, carried in one body so N queries cost one round trip."""
+    takes them, carried in one body so N queries cost one round trip.
+    ``deadline_ms`` (optional, omitted when unset) budgets the whole
+    batch, not each element."""
     items = []
     for request, artifact, route in queries:
         body: Dict[str, Any] = {"request": dataclasses.asdict(request)}
@@ -304,7 +336,10 @@ def encode_request_many(
         if route:
             body["route"] = dict(route)
         items.append(body)
-    return _dumps({"v": WIRE_VERSION, "queries": items})
+    envelope: Dict[str, Any] = {"v": WIRE_VERSION, "queries": items}
+    if deadline_ms is not None:
+        envelope["deadline_ms"] = _check_deadline_ms(deadline_ms)
+    return _dumps(envelope)
 
 
 def decode_request_many(
@@ -316,11 +351,23 @@ def decode_request_many(
     whole envelope with the offending index in the message (a server must
     not answer a batch it only partially understood -- per-query *routing
     and engine* failures, by contrast, are reported per query)."""
+    return decode_request_many_full(data)[0]
+
+
+def decode_request_many_full(
+    data: bytes,
+) -> Tuple[list, Optional[float]]:
+    """Like :func:`decode_request_many` but also surfaces the envelope's
+    optional ``deadline_ms`` (the whole batch's budget; None when
+    unset)."""
     obj = _loads(data)
     _check_version(obj, "request envelope")
-    unknown = set(obj) - {"v", "queries"}
+    unknown = set(obj) - {"v", "queries", "deadline_ms"}
     if unknown:
         raise WireError(f"unknown envelope fields {sorted(unknown)}")
+    deadline_ms = obj.get("deadline_ms")
+    if deadline_ms is not None:
+        deadline_ms = _check_deadline_ms(deadline_ms)
     queries = obj.get("queries")
     if not isinstance(queries, list) or not queries:
         raise WireError("'queries' must be a non-empty array of query objects")
@@ -340,7 +387,7 @@ def decode_request_many(
             out.append(_decode_query(q))
         except WireError as e:
             raise WireError(f"queries[{i}]: {e}", code=e.code) from e
-    return out
+    return out, deadline_ms
 
 
 # ---------------------------------------------------------------------------
