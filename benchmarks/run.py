@@ -14,6 +14,8 @@ Prints ``name,us_per_call,derived`` CSV lines (harness contract).
   bench_meshopt             -- beyond-paper: TPU mesh codesign (eq. 18)
   bench_roofline            -- SRoofline summary from dry-run artifacts
   bench_service             -- query service: cold sweep vs warm artifact
+  bench_portfolio           -- fleet codesign: K-design portfolio search,
+                               NumPy oracle vs jitted JAX scorer
 
 ``--smoke`` runs every suite on tiny problem sizes / downsampled hardware
 spaces (separate artifact cache), sized for a CI lane: the point is that
@@ -31,7 +33,7 @@ import traceback
 SUITE_NAMES = [
     "area", "pareto", "sweep", "sensitivity", "cache_removal",
     "resource_allocation", "kernels", "measure", "meshopt", "roofline",
-    "service",
+    "service", "portfolio",
 ]
 
 
@@ -78,6 +80,7 @@ def main() -> None:
         bench_measure,
         bench_meshopt,
         bench_pareto,
+        bench_portfolio,
         bench_resource_allocation,
         bench_roofline,
         bench_sensitivity,
@@ -100,6 +103,7 @@ def main() -> None:
                 bench_meshopt,
                 bench_roofline,
                 bench_service,
+                bench_portfolio,
             ],
             strict=True,  # a skewed registry must be a hard error
         )

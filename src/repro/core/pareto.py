@@ -4,6 +4,15 @@ A design is Pareto-optimal iff no other design has both lower-or-equal cost
 (area) and strictly higher performance. The paper observes only ~1% of the
 thousands of feasible designs are Pareto-optimal -- "a nearly 100-fold
 savings in design cost".
+
+Tie contract: when several points tie on *every* axis (exact duplicates),
+the survivor is the one with the LOWEST original index, and the mask is
+invariant under permutation/duplication of the input (the surviving point
+set is the same set of (cost, perf) values). Downstream consumers --
+portfolio subset enumeration in particular -- rely on this: an unstable
+tie-break would make candidate sets, and therefore chosen fleets, depend
+on iteration order. Every sort below is explicitly stable to keep the
+contract independent of numpy's default (introsort) tie behavior.
 """
 
 from __future__ import annotations
@@ -17,7 +26,9 @@ def pareto_mask(cost: np.ndarray, perf: np.ndarray) -> np.ndarray:
     """Boolean mask of Pareto-optimal points (minimize cost, maximize perf).
 
     O(n log n): sweep by ascending cost, keep the running best performance.
-    Ties on cost keep only the best-performing point.
+    Ties on cost keep only the best-performing point; full duplicates keep
+    the lowest-index copy (``np.lexsort`` is stable, so equal keys preserve
+    original order and the scan admits only the first).
     """
     cost = np.asarray(cost, np.float64).ravel()
     perf = np.asarray(perf, np.float64).ravel()
@@ -93,9 +104,14 @@ def pareto_mask_batched(cost: np.ndarray, perf: np.ndarray) -> np.ndarray:
 
 
 def pareto_front(cost: np.ndarray, perf: np.ndarray):
-    """(sorted_cost, sorted_perf, indices) of the Pareto-optimal points."""
+    """(sorted_cost, sorted_perf, indices) of the Pareto-optimal points.
+
+    Survivor costs are strictly increasing (equal-cost groups keep one
+    point), but the sort is stable anyway so the lowest-index tie contract
+    cannot silently regress if that invariant ever loosens.
+    """
     mask = pareto_mask(cost, perf)
     idx = np.nonzero(mask)[0]
-    order = np.argsort(np.asarray(cost)[idx])
+    order = np.argsort(np.asarray(cost)[idx], kind="stable")
     idx = idx[order]
     return np.asarray(cost)[idx], np.asarray(perf)[idx], idx

@@ -16,6 +16,9 @@ paper §V.B). This package turns that observation into a serving system:
   artifact across store roots, routes each request by content key or
   selector (GPU / stencil set / workload), keeps an LRU-bounded pool of
   per-artifact servers, and serves it all over stdlib HTTP;
+* :mod:`repro.service.portfolio` -- K-design fleet portfolios persisted as
+  ``kind: "portfolio"`` manifests and the heterogeneity-aware
+  ``/v1/route`` server over them -- see ``docs/portfolio.md``;
 * :mod:`repro.service.wire`    -- the versioned HTTP/JSON codec (requests,
   responses, structured errors) -- see ``docs/serving.md``;
 * :mod:`repro.service.client`  -- thin ``urllib`` client for a gateway;
@@ -49,6 +52,14 @@ from .gateway import (  # noqa: F401
     UnknownArtifactError,
     WrongArtifactKindError,
     serve_http,
+)
+from .portfolio import (  # noqa: F401
+    PortfolioExhaustedError,
+    PortfolioServer,
+    RouteRequest,
+    RouteResponse,
+    UnknownCellError,
+    build_portfolio,
 )
 from .query import QueryEngine, QueryRequest, QueryResponse  # noqa: F401
 from .server import CodesignServer, LMServer, server_from_artifact  # noqa: F401

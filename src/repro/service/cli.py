@@ -25,6 +25,14 @@ Fleet serving (gateway over every stored artifact; see docs/serving.md):
     python -m repro.service.cli query --url http://127.0.0.1:8932 \\
         --gpu tpu_v5e --workload lm --freq llama3-8b:decode=1
 
+Fleet portfolios (K designs + heterogeneity-aware routing; see
+docs/portfolio.md):
+
+    python -m repro.service.cli portfolio --gpu titanx --k 2 --budget 900
+    python -m repro.service.cli route heat2d --gpu titanx
+    python -m repro.service.cli route heat2d --url http://127.0.0.1:8932 \\
+        --gpu titanx
+
 The store location is ``--store``, else ``$REPRO_STORE``, else
 ``~/.cache/repro/codesign-store``.
 """
@@ -377,6 +385,96 @@ def cmd_build(args) -> None:
           f"{len(srv.workload.cells)} cells, gpu={gpu_name})")
 
 
+def cmd_portfolio(args) -> None:
+    """Optimize + persist a K-design fleet portfolio over a sweep
+    artifact, building the sweep first on miss (docs/portfolio.md)."""
+    from .errors import GatewayError
+    from .portfolio import build_portfolio
+
+    srv = _server(args)
+    try:
+        srv.ensure_artifact()
+    except GatewayError as e:
+        raise _die(f"{e.code}: {e}")
+    store = ArtifactStore(args.store)
+    known = set(store.keys())
+    t0 = time.perf_counter()
+    try:
+        art, result = build_portfolio(
+            store, srv.key, args.k, args.budget,
+            objective=args.objective, engine=args.portfolio_engine,
+        )
+    except ValueError as e:
+        raise _die(str(e))
+    members = ",".join(str(m) for m in result.members)
+    print(f"portfolio {art.key}: "
+          f"{'already stored' if art.key in known else 'built'} "
+          f"({time.perf_counter()-t0:.1f}s, k={result.k} "
+          f"objective={result.objective} budget={result.budget:g} "
+          f"members=[{members}] fleet={result.fleet_gflops:.1f} GFLOP/s "
+          f"area={result.total_area:.1f})")
+
+
+def cmd_route(args) -> None:
+    """Route one workload cell-group through a stored portfolio (over
+    HTTP with --url, else in-process through a Gateway)."""
+    from .portfolio import RouteRequest
+
+    req = RouteRequest(cell=args.cell)
+    selector = {}
+    if args.gpu is not None:
+        selector["gpu"] = args.gpu
+    if args.workload is not None:
+        selector["workload"] = args.workload
+    route = (selector or None) if args.artifact is None else None
+    if args.url:
+        from .client import GatewayClient
+
+        client = GatewayClient(args.url)
+        try:
+            resp = client.route(req, artifact=args.artifact, route=route)
+        except RemoteError as e:
+            raise _die(f"gateway refused the route: {e}")
+        except urllib.error.URLError as e:
+            raise _die(f"cannot reach gateway at {args.url}: {e.reason}")
+        origin = f"via {args.url}"
+    else:
+        from .errors import GatewayError
+        from .gateway import Gateway
+
+        try:
+            gw = Gateway([args.store], batch_window=0.0)
+        except FileNotFoundError as e:
+            raise _die(str(e))
+        try:
+            resp = gw.route(req, artifact=args.artifact, route=route)
+        except GatewayError as e:
+            raise _die(f"{e.code}: {e}")
+        origin = "in-process"
+    out = {
+        "portfolio_key": resp.portfolio_key,
+        "sweep_key": resp.sweep_key,
+        "cell": resp.cell,
+        "member_slot": resp.member_slot,
+        "hw_index": resp.hw_index,
+        "point": resp.point,
+        "time_s": resp.time_s,
+        "gflops": resp.gflops,
+        "degraded": resp.degraded,
+        "fallback_from": list(resp.fallback_from),
+    }
+    if args.json:
+        json.dump(out, sys.stdout, indent=1, default=float)
+        sys.stdout.write("\n")
+        return
+    point = " ".join(f"{k}={v:g}" for k, v in resp.point.items() if k != "index")
+    flag = (f"  [degraded: fell back from hw {list(resp.fallback_from)}]"
+            if resp.degraded else "")
+    print(f"portfolio {resp.portfolio_key} ({origin})")
+    print(f"{resp.cell} -> member {resp.member_slot} (hw {resp.hw_index}): "
+          f"{point}  {resp.gflops:.1f} GFLOP/s{flag}")
+
+
 def cmd_ls(args) -> None:
     store = ArtifactStore(args.store)
     rows = store.entries()
@@ -525,6 +623,52 @@ def main(argv=None) -> None:
     b = sub.add_parser("build", help="pre-warm the default paper-workload artifact")
     _add_server_args(b)
     b.set_defaults(fn=cmd_build)
+
+    pf = sub.add_parser(
+        "portfolio",
+        help="optimize + persist a K-design fleet portfolio over a sweep "
+             "(docs/portfolio.md)",
+    )
+    _add_server_args(pf)
+    pf.add_argument("--k", type=int, default=2,
+                    help="max designs in the fleet (sizes 1..K are "
+                         "searched; default %(default)s)")
+    pf.add_argument("--budget", type=float, required=True,
+                    help="total fleet area budget summed over the chosen "
+                         "members (mm^2; chips for LM sweeps)")
+    pf.add_argument("--objective", choices=("density", "throughput"),
+                    default="density",
+                    help="density = fleet GFLOP/s per mm^2 of member area "
+                         "(default); throughput = fleet GFLOP/s (K=1 "
+                         "reproduces the single-design optimum exactly)")
+    pf.add_argument("--portfolio-engine", choices=("numpy", "jax"),
+                    default="numpy",
+                    help="subset-scoring engine (the numpy oracle is the "
+                         "reference; jax is the jitted fused scorer)")
+    pf.set_defaults(fn=cmd_portfolio)
+
+    rt = sub.add_parser(
+        "route",
+        help="route a workload cell-group through a stored portfolio",
+    )
+    rt.add_argument("cell",
+                    help="cell-group label: a stencil name, or model:op "
+                         "for LM sweeps")
+    rt.add_argument("--store", default=DEFAULT_STORE)
+    rt.add_argument("--url", default=None, metavar="URL",
+                    help="route through a running gateway over HTTP "
+                         "instead of in-process")
+    rt.add_argument("--artifact", default=None, metavar="KEY",
+                    help="pin the portfolio content key to route through")
+    rt.add_argument("--gpu", default=None,
+                    help="routing selector matching the portfolio's "
+                         "inherited gpu tag")
+    rt.add_argument("--workload", default=None,
+                    help="routing selector matching the portfolio's "
+                         "inherited workload tag")
+    rt.add_argument("--json", action="store_true",
+                    help="machine-readable output")
+    rt.set_defaults(fn=cmd_route)
 
     ls = sub.add_parser("ls", help="list stored artifacts")
     ls.add_argument("--store", default=DEFAULT_STORE)

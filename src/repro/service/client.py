@@ -57,6 +57,7 @@ from typing import Any, Dict, List, Mapping, Optional, Sequence, Tuple, Union
 from urllib.parse import urlsplit
 
 from . import wire
+from .portfolio import RouteRequest, RouteResponse
 from .query import QueryRequest, QueryResponse
 from .resilience import RetryPolicy
 from repro.obs.trace import TRACE_HEADER
@@ -277,6 +278,19 @@ class GatewayClient:
         """Raw ``/v1/query_many`` body (byte-identity entry point)."""
         return self._http("/v1/query_many", wire.encode_request_many(queries))
 
+    def route_bytes(
+        self,
+        request: RouteRequest,
+        artifact: Optional[str] = None,
+        route: Optional[Mapping[str, Any]] = None,
+    ) -> bytes:
+        """Raw ``/v1/route`` body (the portfolio byte-identity tests'
+        entry point)."""
+        return self._http(
+            "/v1/route",
+            wire.encode_route_request(request, artifact=artifact, route=route),
+        )
+
     # ---- API --------------------------------------------------------------
     def query(
         self,
@@ -297,6 +311,28 @@ class GatewayClient:
             ),
         )
         return wire.decode_response(body, http_status=status)
+
+    def route(
+        self,
+        request: Union[RouteRequest, str],
+        artifact: Optional[str] = None,
+        route: Optional[Mapping[str, Any]] = None,
+        deadline_ms: Optional[float] = None,
+    ) -> RouteResponse:
+        """Route one workload cell through a portfolio artifact
+        (``POST /v1/route``). ``request`` may be a bare cell label for
+        convenience; ``artifact``/``route`` resolve the portfolio the
+        same way :meth:`query` resolves a sweep (but among ``kind:
+        "portfolio"`` manifests)."""
+        if isinstance(request, str):
+            request = RouteRequest(cell=request)
+        body, status = self._request(
+            "/v1/route",
+            wire.encode_route_request(
+                request, artifact=artifact, route=route, deadline_ms=deadline_ms
+            ),
+        )
+        return wire.decode_route_response(body, http_status=status)
 
     def query_traced(
         self,

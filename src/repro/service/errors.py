@@ -38,7 +38,12 @@ ERROR_HTTP_STATUS = {
     "ambiguous_workload": 400,
     "unknown_artifact": 404,
     "not_found": 404,
+    # portfolio routing (docs/portfolio.md): unknown_cell is the route
+    # twin of unknown_artifact; portfolio_exhausted means every member
+    # design's breaker/read failed -- retryable with backoff.
+    "unknown_cell": 404,
     "ambiguous_route": 409,
+    "portfolio_exhausted": 503,
     # resilience layer (docs/resilience.md): 429/503 are retryable with
     # backoff (the response carries Retry-After); 504 means the caller's
     # own deadline_ms budget ran out -- retrying with the same budget

@@ -31,6 +31,10 @@ called):
                           batch answers (slow-follower symptom)
 ``gateway.drop_socket``   the HTTP handler -- close the connection without
                           answering (client sees a reset/EOF)
+``route.member.<hw>``     :meth:`repro.service.portfolio.PortfolioServer
+                          .route` -- fail one portfolio member (hardware
+                          index ``<hw>``) so routing degrades onto the
+                          next-preferred design instead of erroring
 ========================  ==================================================
 
 Fault spec fields: ``latency_s`` (sleep before proceeding), ``error``

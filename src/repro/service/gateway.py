@@ -67,6 +67,7 @@ from repro.obs.trace import TRACE_HEADER, new_trace_id, span, trace
 
 from . import faults, wire
 from .errors import GatewayError
+from .portfolio import PortfolioServer, RouteRequest, RouteResponse
 from .query import QueryRequest, QueryResponse
 from .resilience import (
     CLIENT_HEADER,
@@ -146,8 +147,8 @@ _M_ART_SECONDS = _REG.histogram(
 #: the bounded set of HTTP route labels (unknown paths all fold into
 #: "other" so a path-scanning client can't explode label cardinality).
 _ROUTES = (
-    "/v1/query", "/v1/query_many", "/v1/artifacts", "/v1/healthz",
-    "/v1/metrics", "/v1/refresh",
+    "/v1/query", "/v1/query_many", "/v1/route", "/v1/artifacts",
+    "/v1/healthz", "/v1/metrics", "/v1/refresh",
 )
 
 
@@ -254,9 +255,10 @@ class Gateway:
         self._t0_mono = time.monotonic()  # uptime basis (NTP-step immune)
         self._telemetry_mu = threading.Lock()
         self._telemetry_last = time.monotonic()
-        self._mu = threading.Lock()  # guards _index and _pool
+        self._mu = threading.Lock()  # guards _index and both pools
         self._index: "OrderedDict[str, Dict[str, Any]]" = OrderedDict()
         self._pool: "OrderedDict[str, CodesignServer]" = OrderedDict()
+        self._portfolio_pool: "OrderedDict[str, PortfolioServer]" = OrderedDict()
         self.stats: Dict[str, int] = {
             "requests": 0,
             "routed_by_key": 0,
@@ -286,6 +288,8 @@ class Gateway:
             self.stats["rescans"] += 1
             for key in [k for k in self._pool if k not in index]:
                 del self._pool[key]
+            for key in [k for k in self._portfolio_pool if k not in index]:
+                del self._portfolio_pool[key]
         return len(index)
 
     def keys(self) -> List[str]:
@@ -388,9 +392,13 @@ class Gateway:
                             self.stats["routed_by_key"] += 1
                             return artifact
                 if row is not None:
+                    want = (
+                        "a queryable sweep" if kinds == ("sweep",)
+                        else f"a routable {'/'.join(kinds)} manifest"
+                    )
                     raise WrongArtifactKindError(
                         f"artifact {artifact!r} is a {row.get('kind')!r} manifest, "
-                        f"not a queryable sweep"
+                        f"not {want}"
                     )
             elif route:
                 matches = self._match(route, kinds)
@@ -505,6 +513,61 @@ class Gateway:
                 self.stats["pool_evictions"] += 1
         return srv
 
+    def portfolio_server_for(self, key: str) -> PortfolioServer:
+        """The pooled :class:`~repro.service.portfolio.PortfolioServer`
+        for an (already resolved) portfolio key. Shares the gateway's
+        resilience bundle, so route-time member reads run under the
+        per-member circuit breakers; the build itself (two manifest
+        loads) runs under the portfolio's own breaker like any pool
+        miss."""
+        with self._mu:
+            srv = self._portfolio_pool.get(key)
+            if srv is not None:
+                self._portfolio_pool.move_to_end(key)
+                self.stats["pool_hits"] += 1
+                return srv
+            row = self._index.get(key)
+        if row is None:
+            raise UnknownArtifactError(f"artifact {key!r} is not indexed")
+        if row.get("kind", "sweep") != "portfolio":
+            raise WrongArtifactKindError(
+                f"artifact {key!r} is a {row.get('kind')!r} manifest; only "
+                "portfolio artifacts serve /v1/route"
+            )
+        store: ArtifactStore = row["store"]
+        res = self.resilience
+        breaker = res.breaker(key) if res is not None else None
+        ctx = breaker.call() if breaker is not None else contextlib.nullcontext()
+        with ctx:
+            art = store.get(key)
+            if art is None:
+                self.refresh()
+                raise UnknownArtifactError(
+                    f"artifact {key!r} vanished from {store.root}"
+                )
+            sweep_key = art.payload.get("sweep_key")
+            sweep = None
+            for s in [store] + [s for s in self.stores if s is not store]:
+                sweep = s.get(sweep_key)
+                if sweep is not None:
+                    break
+            if sweep is None:
+                raise UnknownArtifactError(
+                    f"portfolio {key!r} references sweep {sweep_key!r}, which "
+                    "no store root holds (was the member sweep deleted?)"
+                )
+            srv = PortfolioServer(art, sweep, resilience=res)
+        with self._mu:
+            winner = self._portfolio_pool.setdefault(key, srv)
+            if winner is srv:
+                self.stats["pool_instantiations"] += 1
+            srv = winner
+            self._portfolio_pool.move_to_end(key)
+            while len(self._portfolio_pool) > self.pool_size:
+                self._portfolio_pool.popitem(last=False)
+                self.stats["pool_evictions"] += 1
+        return srv
+
     # ---- queries ----------------------------------------------------------
     def _note_artifact(self, key: str, dispatch_s: float, n: int = 1) -> None:
         """Per-artifact hit accounting behind ``/v1/artifacts`` rows and
@@ -532,6 +595,30 @@ class Gateway:
         t0 = time.perf_counter()
         with span("dispatch", artifact=key[:12]):
             response = srv.query(request)
+        self._note_artifact(key, time.perf_counter() - t0)
+        self._maybe_persist_telemetry()
+        return response
+
+    def route(
+        self,
+        request: RouteRequest,
+        artifact: Optional[str] = None,
+        route: Optional[Mapping[str, Any]] = None,
+    ) -> RouteResponse:
+        """Resolve a portfolio (key or selector, among ``kind:
+        "portfolio"`` manifests only) and route one workload cell to its
+        assigned member design (``POST /v1/route``)."""
+        with self._mu:
+            self.stats["requests"] += 1
+        check_deadline("gateway.resolve")
+        with span("resolve"):
+            key = self.resolve(artifact, route, kinds=("portfolio",))
+        check_deadline("gateway.pool")
+        with span("pool", artifact=key[:12]):
+            srv = self.portfolio_server_for(key)
+        t0 = time.perf_counter()
+        with span("dispatch", artifact=key[:12]):
+            response = srv.route(request)
         self._note_artifact(key, time.perf_counter() - t0)
         self._maybe_persist_telemetry()
         return response
@@ -907,6 +994,21 @@ class _Handler(BaseHTTPRequestHandler):
             body = wire.encode_response(response, trace=tree)
         self._send(200, body, headers={TRACE_HEADER: tid})
 
+    def _answer_route(self, data: bytes) -> None:
+        """POST /v1/route: canonical-byte answers like /v1/query (the
+        portfolio byte-identity surface); degraded fallback answers are
+        still HTTP 200 -- ``degraded: true`` rides in the payload."""
+        request, artifact, route_sel, env_ms = wire.decode_route_request_full(data)
+        deadline = self._request_deadline(env_ms)
+        tid = _clean_trace_id(self.headers.get(TRACE_HEADER))
+        with deadline_scope(deadline):
+            response = self.gateway.route(
+                request, artifact=artifact, route=route_sel
+            )
+        with _M_ENCODE_SECONDS.time():
+            body = wire.encode_route_response(response)
+        self._send(200, body, headers={TRACE_HEADER: tid})
+
     def _answer_query_many(self, data: bytes) -> None:
         """POST /v1/query_many: an envelope-level deadline bounds the
         whole batch (elements past the budget classify as
@@ -936,7 +1038,7 @@ class _Handler(BaseHTTPRequestHandler):
                 n = self.gateway.refresh()
                 self._send(200, json.dumps({"ok": True, "artifacts": n}).encode())
                 return
-            if self.path not in ("/v1/query", "/v1/query_many"):
+            if self.path not in ("/v1/query", "/v1/query_many", "/v1/route"):
                 self._send_error(wire.ERROR_HTTP_STATUS["not_found"], "not_found",
                              f"no such endpoint {self.path!r}")
                 return
@@ -952,6 +1054,8 @@ class _Handler(BaseHTTPRequestHandler):
             with admit:
                 if self.path == "/v1/query_many":
                     self._answer_query_many(data)
+                elif self.path == "/v1/route":
+                    self._answer_route(data)
                 else:
                     self._answer_query(data)
         except wire.WireError as e:

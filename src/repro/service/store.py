@@ -93,9 +93,12 @@ FORMAT_VERSION = 1
 #: :mod:`repro.measure` (timing runs / refitted machine parameters);
 #: "telemetry" is a manifest-only per-artifact hit/latency snapshot
 #: persisted by a serving gateway (:meth:`repro.service.gateway.Gateway
-#: .persist_telemetry`) so a future retention policy has data to act on.
+#: .persist_telemetry`) so a future retention policy has data to act on;
+#: "portfolio" is a manifest-only fleet decision (K member designs of a
+#: sweep + the traffic assignment, :mod:`repro.service.portfolio`) that
+#: the gateway routes ``POST /v1/route`` requests through.
 #: Manifests written before kinds existed read as "sweep".
-KINDS = ("sweep", "measurement", "calibration", "telemetry")
+KINDS = ("sweep", "measurement", "calibration", "telemetry", "portfolio")
 
 #: engines whose optima matrices are bit-identical share one content
 #: address: "sharded" is the same compiled program as "jax", merely

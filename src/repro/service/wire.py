@@ -49,6 +49,7 @@ from typing import Any, Dict, Mapping, Optional, Sequence, Tuple, Union
 import numpy as np
 
 from .errors import ERROR_HTTP_STATUS  # noqa: F401  (re-export: THE registry)
+from .portfolio import RouteRequest, RouteResponse
 from .query import QueryRequest, QueryResponse
 
 __all__ = [
@@ -69,6 +70,11 @@ __all__ = [
     "decode_response_traced",
     "encode_response_many",
     "decode_response_many",
+    "encode_route_request",
+    "decode_route_request",
+    "decode_route_request_full",
+    "encode_route_response",
+    "decode_route_response",
     "encode_error",
 ]
 
@@ -91,6 +97,9 @@ MAX_BATCH = 1024
 
 #: request fields a v1 server accepts, mirroring QueryRequest exactly.
 _REQUEST_FIELDS = frozenset(f.name for f in dataclasses.fields(QueryRequest))
+
+#: route-request fields, mirroring RouteRequest exactly (same strictness).
+_ROUTE_REQUEST_FIELDS = frozenset(f.name for f in dataclasses.fields(RouteRequest))
 
 
 class WireError(ValueError):
@@ -388,6 +397,138 @@ def decode_request_many_full(
         except WireError as e:
             raise WireError(f"queries[{i}]: {e}", code=e.code) from e
     return out, deadline_ms
+
+
+# ---------------------------------------------------------------------------
+# routing (POST /v1/route -- portfolio heterogeneity-aware routing)
+# ---------------------------------------------------------------------------
+def encode_route_request(
+    request: RouteRequest,
+    artifact: Optional[str] = None,
+    route: Optional[Mapping[str, Any]] = None,
+    deadline_ms: Optional[float] = None,
+) -> bytes:
+    """Serialize one ``POST /v1/route`` request. Same envelope shape as
+    :func:`encode_request` (``artifact`` pins a portfolio's content key,
+    ``route`` is a selector resolved among ``kind: "portfolio"``
+    manifests, ``deadline_ms`` budgets the request); the ``request`` body
+    carries the :class:`~repro.service.portfolio.RouteRequest` fields."""
+    body: Dict[str, Any] = {
+        "v": WIRE_VERSION,
+        "request": dataclasses.asdict(request),
+    }
+    if artifact is not None:
+        body["artifact"] = str(artifact)
+    if route:
+        body["route"] = dict(route)
+    if deadline_ms is not None:
+        body["deadline_ms"] = _check_deadline_ms(deadline_ms)
+    return _dumps(body)
+
+
+def decode_route_request(
+    data: bytes,
+) -> Tuple[RouteRequest, Optional[str], Optional[dict]]:
+    """Bytes -> ``(RouteRequest, artifact_key, route)`` (strict, like
+    :func:`decode_request`)."""
+    return decode_route_request_full(data)[:3]
+
+
+def decode_route_request_full(
+    data: bytes,
+) -> Tuple[RouteRequest, Optional[str], Optional[dict], Optional[float]]:
+    """The whole v1 route envelope: ``(request, artifact, route,
+    deadline_ms)``; the HTTP handler decodes through this."""
+    obj = _loads(data)
+    _check_version(obj, "request envelope")
+    unknown = set(obj) - {"v", "artifact", "route", "request", "deadline_ms"}
+    if unknown:
+        raise WireError(f"unknown envelope fields {sorted(unknown)}")
+    deadline_ms = obj.get("deadline_ms")
+    if deadline_ms is not None:
+        deadline_ms = _check_deadline_ms(deadline_ms)
+    artifact = obj.get("artifact")
+    if artifact is not None and not isinstance(artifact, str):
+        raise WireError("'artifact' must be a string key")
+    route = obj.get("route")
+    if route is not None and not isinstance(route, dict):
+        raise WireError("'route' must be an object of selector: value pairs")
+    req = obj.get("request")
+    if not isinstance(req, dict):
+        raise WireError("'request' must be an object (the RouteRequest fields)")
+    unknown = set(req) - _ROUTE_REQUEST_FIELDS
+    if unknown:
+        raise WireError(
+            f"unknown request fields {sorted(unknown)} "
+            f"(v{WIRE_VERSION} route accepts {sorted(_ROUTE_REQUEST_FIELDS)})"
+        )
+    cell = req.get("cell")
+    if not isinstance(cell, str) or not cell:
+        raise WireError("'cell' must be a non-empty string cell label")
+    return RouteRequest(cell=cell), artifact, route, deadline_ms
+
+
+def _route_response_payload(response: RouteResponse) -> Dict[str, Any]:
+    """Canonical JSON-able body of one routing decision. ``degraded`` and
+    ``fallback_from`` are always present (not elided when falsy): a
+    client must be able to distinguish "healthy answer" from "old server
+    that predates degradation marking" without guessing."""
+    return {
+        "portfolio_key": response.portfolio_key,
+        "sweep_key": response.sweep_key,
+        "cell": response.cell,
+        "cell_indices": [int(i) for i in response.cell_indices],
+        "hw_index": int(response.hw_index),
+        "member_slot": int(response.member_slot),
+        "point": dict(response.point),
+        "time_s": float(response.time_s),
+        "gflops": float(response.gflops),
+        "degraded": bool(response.degraded),
+        "fallback_from": [int(i) for i in response.fallback_from],
+    }
+
+
+def encode_route_response(response: RouteResponse) -> bytes:
+    """Serialize a routing answer (canonical bytes, same determinism
+    contract as :func:`encode_response` -- the gateway's ``/v1/route``
+    byte-identity test encodes the in-process answer through this)."""
+    return _dumps(
+        {"v": WIRE_VERSION, "ok": True, "response": _route_response_payload(response)}
+    )
+
+
+def decode_route_response(data: bytes, http_status: int = 0) -> RouteResponse:
+    """Bytes -> :class:`~repro.service.portfolio.RouteResponse`; a
+    structured error envelope raises :class:`RemoteError`."""
+    obj = _loads(data)
+    _check_version(obj, "response envelope")
+    if not obj.get("ok"):
+        err = obj.get("error") or {}
+        raise RemoteError(
+            str(err.get("code", "unknown")),
+            str(err.get("message", "(no message)")),
+            http_status,
+        )
+    r = obj.get("response")
+    if not isinstance(r, dict):
+        raise WireError("'response' must be an object")
+    r = _unjsonify(r)
+    try:
+        return RouteResponse(
+            portfolio_key=str(r["portfolio_key"]),
+            sweep_key=str(r["sweep_key"]),
+            cell=str(r["cell"]),
+            cell_indices=tuple(int(i) for i in r["cell_indices"]),
+            hw_index=int(r["hw_index"]),
+            member_slot=int(r["member_slot"]),
+            point=dict(r["point"]),
+            time_s=float(r["time_s"]),
+            gflops=float(r["gflops"]),
+            degraded=bool(r["degraded"]),
+            fallback_from=tuple(int(i) for i in r["fallback_from"]),
+        )
+    except (KeyError, TypeError, ValueError) as e:
+        raise WireError(f"bad route response field: {e}") from e
 
 
 # ---------------------------------------------------------------------------

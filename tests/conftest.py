@@ -1,8 +1,22 @@
-"""Shared test fixtures."""
+"""Shared test fixtures + hypothesis profiles."""
 
 import os
 
 import pytest
+
+from _hypothesis_compat import HAVE_HYPOTHESIS
+
+if HAVE_HYPOTHESIS:
+    # CI runs `pytest --hypothesis-profile=ci`: derandomized (a red lane
+    # must reproduce on re-run) with the wall-clock deadline disabled
+    # (shared runners stall; flaking on scheduler noise helps no one).
+    # Local runs keep hypothesis defaults -- randomized exploration is
+    # the point of running the properties on a developer machine.
+    from hypothesis import settings as _hyp_settings
+
+    _hyp_settings.register_profile(
+        "ci", deadline=None, derandomize=True, max_examples=50
+    )
 
 
 @pytest.fixture
