@@ -1,0 +1,120 @@
+#!/usr/bin/env python
+"""Compare the newest benchmark entry against the previous one and fail
+on large throughput regressions.
+
+For each trajectory file (``BENCH_sweep.json``, ``BENCH_portfolio.json``
+by default) the newest entry is matched against the most recent *earlier*
+entry with the same ``(suite, smoke)`` signature, and every shared
+``*_qps`` field is compared.  A field that dropped below
+``old * (1 - threshold)`` (default threshold 25%) is a regression and the
+script exits 1; everything else — missing files, empty trajectories, a
+suite with no prior entry, non-numeric or absent fields — is reported and
+tolerated, because a fresh clone or a brand-new suite is not a
+regression.
+
+Usage:
+    python scripts/bench_regress.py [--threshold 0.25] [FILE ...]
+
+The CI bench lane runs this non-blocking (continue-on-error): it is a
+tripwire for eyeballs on the PR, not a merge gate — smoke-sized runs on
+shared runners are too noisy to block on.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+DEFAULT_FILES = ["BENCH_sweep.json", "BENCH_portfolio.json"]
+DEFAULT_THRESHOLD = 0.25
+
+
+def _signature(entry):
+    return (entry.get("suite"), bool(entry.get("smoke")))
+
+
+def _qps_fields(entry):
+    return {
+        k: v
+        for k, v in entry.items()
+        if k.endswith("_qps") and isinstance(v, (int, float)) and v > 0
+    }
+
+
+def check_file(path, threshold):
+    """Return a list of regression strings for one trajectory file."""
+    if not os.path.exists(path):
+        print(f"skip {path}: not found")
+        return []
+    try:
+        with open(path) as f:
+            entries = json.load(f)
+    except (OSError, ValueError) as exc:
+        print(f"skip {path}: unreadable ({exc})")
+        return []
+    if not isinstance(entries, list) or len(entries) < 2:
+        print(f"skip {path}: fewer than 2 entries")
+        return []
+
+    newest = entries[-1]
+    sig = _signature(newest)
+    prev = next(
+        (e for e in reversed(entries[:-1]) if _signature(e) == sig), None
+    )
+    if prev is None:
+        print(f"skip {path}: no earlier entry for suite={sig[0]} smoke={sig[1]}")
+        return []
+
+    new_qps = _qps_fields(newest)
+    old_qps = _qps_fields(prev)
+    shared = sorted(set(new_qps) & set(old_qps))
+    if not shared:
+        print(f"skip {path}: no shared *_qps fields between newest entries")
+        return []
+
+    regressions = []
+    for field in shared:
+        old, new = old_qps[field], new_qps[field]
+        delta_pct = 100.0 * (new - old) / old
+        verdict = "ok"
+        if new < old * (1.0 - threshold):
+            verdict = "REGRESSION"
+            regressions.append(
+                f"{path}: {field} {old:.1f} -> {new:.1f} qps "
+                f"({delta_pct:+.1f}%, limit -{threshold * 100:.0f}%)"
+            )
+        print(
+            f"{verdict:>10}  {path} {field}: "
+            f"{old:.1f} -> {new:.1f} qps ({delta_pct:+.1f}%)"
+        )
+    return regressions
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("files", nargs="*", default=None,
+                    help="trajectory files (default: %s)" % " ".join(DEFAULT_FILES))
+    ap.add_argument("--threshold", type=float, default=DEFAULT_THRESHOLD,
+                    help="fractional qps drop that fails (default 0.25)")
+    args = ap.parse_args(argv)
+    if not 0.0 < args.threshold < 1.0:
+        ap.error("--threshold must be in (0, 1)")
+
+    files = args.files or DEFAULT_FILES
+    regressions = []
+    for path in files:
+        regressions.extend(check_file(path, args.threshold))
+
+    if regressions:
+        print("\n%d regression(s):" % len(regressions))
+        for r in regressions:
+            print("  " + r)
+        return 1
+    print("\nno benchmark regressions")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -16,10 +16,14 @@ End-to-end, through the actual CLI entry points (no test fixtures):
    the byte-identity step's query count, per-artifact hit counters and
    ``/v1/artifacts`` advisory ``hits``/``last_access`` rows agree, and
    the Prometheus text exposition parses line by line;
-5. assert the structured error paths answer as documented
+5. scrape ``GET /v1/slo`` and assert the ``/v1/query`` objective block
+   carries 5m/1h windows with finite burn rates, a count equal to the
+   queries issued, a legal status, and that ``/v1/healthz`` surfaces the
+   same worst-route status in its ``slo`` field;
+6. assert the structured error paths answer as documented
    (unknown artifact -> 404 ``unknown_artifact``, malformed JSON -> 400
    ``bad_request``) without taking the server down;
-6. assert ``serve`` on a missing store exits non-zero with a one-line
+7. assert ``serve`` on a missing store exits non-zero with a one-line
    error (no traceback).
 
 Exit 0 and print PASS only if every check holds.
@@ -70,7 +74,7 @@ def main() -> None:
     args = ap.parse_args()
     store_root = args.store or tempfile.mkdtemp(prefix="gateway-smoke-")
 
-    print(f"[1/6] building {len(GPUS)} artifacts under {store_root}")
+    print(f"[1/7] building {len(GPUS)} artifacts under {store_root}")
     for gpu in GPUS:
         subprocess.run(
             CLI + ["build", "--store", store_root, "--gpu", gpu,
@@ -86,7 +90,7 @@ def main() -> None:
         oracles[row["gpu"]] = CodesignServer.from_artifact(store, art, batch_window=0.0)
     check(set(oracles) == set(GPUS), f"store holds one artifact per GPU {GPUS}")
 
-    print("[2/6] starting the gateway (CLI serve, port 0)")
+    print("[2/7] starting the gateway (CLI serve, port 0)")
     proc = subprocess.Popen(
         CLI + ["serve", "--store", store_root, "--port", "0"],
         stdout=subprocess.PIPE, text=True, env=_env(),
@@ -102,7 +106,7 @@ def main() -> None:
         client = GatewayClient(url)
         check(client.health()["artifacts"] == len(GPUS), "healthz sees both artifacts")
 
-        print(f"[3/6] HTTP vs in-process oracle at {url}")
+        print(f"[3/7] HTTP vs in-process oracle at {url}")
         requests = [
             QueryRequest(freqs={"heat2d": 3.0, "jacobi2d": 1.0}, max_area=450.0,
                          top_k=3, use_cache=False),
@@ -119,7 +123,7 @@ def main() -> None:
                 check(resp.artifact_key == oracle.key,
                       f"routed to the {gpu} artifact")
 
-        print("[4/6] metrics scrape agrees with the traffic issued")
+        print("[4/7] metrics scrape agrees with the traffic issued")
         n_queries = len(oracles) * len(requests)
         snap = client.metrics()  # canonical-JSON snapshot
         got = sum(s["value"]
@@ -144,7 +148,27 @@ def main() -> None:
                   for o in oracles.values()),
               "/v1/artifacts rows carry matching hits + last_access")
 
-        print("[5/6] structured error paths")
+        print("[5/7] /v1/slo scrape: objectives + burn rates over the traffic")
+        import math
+        slo = client.slo()
+        q = slo["routes"].get("/v1/query")
+        check(q is not None, "/v1/slo reports the /v1/query route")
+        check(set(q["windows"]) == {"5m", "1h"}, "slo windows are 5m + 1h")
+        check(all(math.isfinite(w["availability_burn"])
+                  and math.isfinite(w["latency_burn"])
+                  for w in q["windows"].values()),
+              "burn rates are finite numbers")
+        check(q["windows"]["1h"]["count"] == n_queries,
+              f"slo 1h window counted the {n_queries} queries issued")
+        check(q["status"] in ("ok", "burning", "violated"),
+              "route status is a legal value")
+        check(client.health()["slo"] in ("ok", "burning", "violated"),
+              "healthz carries the fleet slo status")
+        prom = client.slo("prometheus")
+        check("repro_slo_burn_rate" in prom,
+              "prometheus rendering exposes repro_slo_burn_rate")
+
+        print("[6/7] structured error paths")
         try:
             client.query(requests[0], artifact="0" * 20)
             check(False, "unknown artifact must raise")
@@ -163,7 +187,7 @@ def main() -> None:
         proc.terminate()
         proc.wait(timeout=30)
 
-    print("[6/6] serve on a missing store exits cleanly")
+    print("[7/7] serve on a missing store exits cleanly")
     r = subprocess.run(
         CLI + ["serve", "--store", os.path.join(store_root, "nope"), "--port", "0"],
         capture_output=True, text=True, env=_env(), timeout=120,

@@ -21,7 +21,14 @@ metric into a no-op (asserted < 5% throughput delta in
 ``benchmarks/bench_service.py``).
 """
 
+from .exemplar import ExemplarStore  # noqa: F401
 from .logging import configure_logging, get_logger  # noqa: F401
+from .slo import (  # noqa: F401
+    DEFAULT_OBJECTIVES,
+    SLOObjective,
+    SLOTracker,
+    bucket_quantile,
+)
 from .metrics import (  # noqa: F401
     Counter,
     Gauge,

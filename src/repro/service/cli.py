@@ -519,6 +519,55 @@ def cmd_upgrade(args) -> None:
     print(f"{total} manifest(s) upgraded, {stored} total")
 
 
+def cmd_gc(args) -> None:
+    """Kind-aware artifact retention over store root(s): the default
+    (``--dry-run``) prints the deterministic eviction plan as canonical
+    JSON; ``--apply`` executes it via :meth:`ArtifactStore.delete`.
+    Telemetry snapshots age out first; a sweep referenced by a stored
+    portfolio member is never evicted (docs/serving.md)."""
+    from .usage import UsageLedger, retention_plan
+
+    roots = [args.store] + (args.root or [])
+    out = []
+    for root in roots:
+        try:
+            store = ArtifactStore(root, create=False)
+        except FileNotFoundError as e:
+            raise _die(str(e))
+        # routing rows don't carry payload fields; decorate the two kinds
+        # whose plan inputs live there (telemetry age, portfolio member)
+        entries = []
+        for row in store.entries():
+            kind = row.get("kind", "sweep")
+            if kind in ("telemetry", "portfolio"):
+                art = store.get(row["key"])
+                if art is not None:
+                    if kind == "telemetry":
+                        row = {**row,
+                               "collected_at": art.payload.get("collected_at")}
+                    else:
+                        row = {**row, "sweep_key": art.payload.get("sweep_key")}
+            entries.append(row)
+        try:
+            plan = retention_plan(
+                entries,
+                UsageLedger(root).snapshot(),
+                telemetry_cap=args.telemetry_cap,
+                max_artifacts=args.max_artifacts,
+            )
+        except ValueError as e:
+            raise _die(str(e))
+        deleted = []
+        if args.apply:
+            for e in plan["evict"]:
+                if store.delete(e["key"]):
+                    deleted.append(e["key"])
+        out.append({"root": store.root, "plan": plan,
+                    "applied": bool(args.apply), "deleted": deleted})
+    json.dump(out, sys.stdout, indent=1, sort_keys=True)
+    sys.stdout.write("\n")
+
+
 def cmd_serve(args) -> None:
     """Run the fleet gateway over every artifact under the store root(s).
 
@@ -558,6 +607,8 @@ def cmd_serve(args) -> None:
             batch_window=args.batch_window,
             telemetry_interval=args.telemetry_interval,
             resilience=resilience,
+            usage_flush_interval=args.usage_flush_interval,
+            telemetry_cap=args.telemetry_cap,
         )
     except FileNotFoundError as e:
         raise _die(str(e))
@@ -584,6 +635,7 @@ def cmd_serve(args) -> None:
     except KeyboardInterrupt:
         pass
     finally:
+        gw.flush_usage()  # buffered ledger deltas survive the shutdown
         httpd.server_close()
 
 
@@ -731,7 +783,39 @@ def main(argv=None) -> None:
                    help="seconds between persisted per-artifact telemetry "
                         "snapshots (kind: 'telemetry' store artifacts; "
                         "0 = off, the default)")
+    s.add_argument("--telemetry-cap", type=int, default=32, metavar="N",
+                   help="retained telemetry snapshots per store root; older "
+                        "ones are pruned after each persist (default "
+                        "%(default)s)")
+    s.add_argument("--usage-flush-interval", type=float, default=60.0,
+                   metavar="SECONDS",
+                   help="seconds between usage-ledger flushes to the "
+                        ".usage-ledger.json beside each store root "
+                        "(default %(default)s)")
     s.set_defaults(fn=cmd_serve)
+
+    g = sub.add_parser(
+        "gc",
+        help="plan / apply kind-aware artifact retention over a store "
+             "(docs/serving.md)",
+    )
+    g.add_argument("--store", default=DEFAULT_STORE)
+    g.add_argument("--root", action="append", metavar="DIR",
+                   help="additional store root (repeatable)")
+    mx = g.add_mutually_exclusive_group()
+    mx.add_argument("--dry-run", action="store_true",
+                    help="print the eviction plan without deleting "
+                         "(the default)")
+    mx.add_argument("--apply", action="store_true",
+                    help="execute the plan (deletes artifacts)")
+    g.add_argument("--telemetry-cap", type=int, default=32, metavar="N",
+                   help="retained telemetry snapshots per root, newest "
+                        "first (default %(default)s)")
+    g.add_argument("--max-artifacts", type=int, default=None, metavar="N",
+                   help="optional total cap per root: evict the coldest "
+                        "unprotected artifacts beyond it (ledger hits, "
+                        "then last access, then kind)")
+    g.set_defaults(fn=cmd_gc)
 
     args = ap.parse_args(argv)
     args.fn(args)

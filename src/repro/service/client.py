@@ -377,6 +377,33 @@ class GatewayClient:
             )
         return raw.decode("utf-8")
 
+    def slo(self, fmt: str = "json") -> Union[Dict[str, Any], str]:
+        """Scrape ``GET /v1/slo``: ``fmt="json"`` returns the decoded
+        burn-rate report (see :class:`repro.obs.slo.SLOTracker.report`),
+        ``fmt="prometheus"`` the gauge-only text exposition as str."""
+        if fmt == "json":
+            raw, status = self._request("/v1/slo?format=json")
+            return wire.decode_slo_response(raw, http_status=status)
+        raw, status = self._request(f"/v1/slo?format={fmt}")
+        if not 200 <= status < 300:
+            raise wire.RemoteError(
+                "bad_request", raw[:200].decode("utf-8", "replace"), status
+            )
+        return raw.decode("utf-8")
+
+    def exemplars(self, route: Optional[str] = None) -> Dict[str, Any]:
+        """Fetch the tail-exemplar rings (``GET /v1/debug/exemplars``):
+        slowest-N span trees plus the recent-error ring, per route. Pass
+        ``route`` to filter to one route's rings (an unknown route raises
+        :class:`~repro.service.wire.RemoteError` code ``unknown_route``)."""
+        path = "/v1/debug/exemplars"
+        if route is not None:
+            from urllib.parse import quote
+
+            path += f"?route={quote(route, safe='')}"
+        raw, status = self._request(path)
+        return wire.decode_exemplars_response(raw, http_status=status)
+
     def query_many(
         self,
         queries: Sequence[

@@ -42,6 +42,10 @@ ERROR_HTTP_STATUS = {
     # twin of unknown_artifact; portfolio_exhausted means every member
     # design's breaker/read failed -- retryable with backoff.
     "unknown_cell": 404,
+    # observability endpoints (docs/observability.md): unknown_route is
+    # a /v1/debug/exemplars?route= filter naming a route the gateway
+    # does not serve -- a caller typo, not a retryable condition.
+    "unknown_route": 404,
     "ambiguous_route": 409,
     "portfolio_exhausted": 503,
     # resilience layer (docs/resilience.md): 429/503 are retryable with

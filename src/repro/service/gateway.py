@@ -62,11 +62,15 @@ from typing import Any, Dict, List, Mapping, Optional, Sequence, Tuple, Union
 from urllib.parse import parse_qs, urlsplit
 
 from repro.obs import get_logger
+from repro.obs.exemplar import ExemplarStore
 from repro.obs.metrics import get_registry as _obs_registry
+from repro.obs.process import M_CONNECTIONS, M_POOL_SERVERS, sample_process
+from repro.obs.slo import DEFAULT_OBJECTIVES, SLOObjective, SLOTracker
 from repro.obs.trace import TRACE_HEADER, new_trace_id, span, trace
 
 from . import faults, wire
 from .errors import GatewayError
+from .usage import UsageLedger
 from .portfolio import PortfolioServer, RouteRequest, RouteResponse
 from .query import QueryRequest, QueryResponse
 from .resilience import (
@@ -84,6 +88,7 @@ __all__ = [
     "Gateway",
     "GatewayError",
     "UnknownArtifactError",
+    "UnknownRouteError",
     "AmbiguousRouteError",
     "AmbiguousWorkloadError",
     "WrongArtifactKindError",
@@ -148,7 +153,19 @@ _M_ART_SECONDS = _REG.histogram(
 #: "other" so a path-scanning client can't explode label cardinality).
 _ROUTES = (
     "/v1/query", "/v1/query_many", "/v1/route", "/v1/artifacts",
-    "/v1/healthz", "/v1/metrics", "/v1/refresh",
+    "/v1/healthz", "/v1/metrics", "/v1/slo", "/v1/debug/exemplars",
+    "/v1/refresh",
+)
+
+#: the routes whose finished requests are offered as tail exemplars
+#: (slowest-N span trees + error ring; docs/observability.md).
+_EXEMPLAR_ROUTES = ("/v1/query", "/v1/query_many", "/v1/route")
+
+#: per-request client bucket (X-Repro-Client header or peer address),
+#: set by the HTTP handler so the usage ledger can attribute hits
+#: without threading a parameter through every query signature.
+_CLIENT_BUCKET: contextvars.ContextVar[Optional[str]] = contextvars.ContextVar(
+    "repro_gateway_client_bucket", default=None
 )
 
 
@@ -168,6 +185,14 @@ class UnknownArtifactError(GatewayError):
 
     code = "unknown_artifact"
     http_status = wire.ERROR_HTTP_STATUS["unknown_artifact"]
+
+
+class UnknownRouteError(GatewayError):
+    """A ``/v1/debug/exemplars?route=`` filter named a route this gateway
+    does not serve -- a caller typo, not a retryable condition (HTTP 404)."""
+
+    code = "unknown_route"
+    http_status = wire.ERROR_HTTP_STATUS["unknown_route"]
 
 
 class AmbiguousRouteError(GatewayError):
@@ -227,6 +252,25 @@ class Gateway:
         rate limits, inflight cap 128, breaker threshold 5); pass
         ``None`` to disable resilience entirely (deadlines still
         propagate -- they are a per-request contract, not a knob).
+    slo_objectives:
+        Per-route :class:`~repro.obs.slo.SLOObjective` declarations
+        tracked by the gateway's :class:`~repro.obs.slo.SLOTracker`
+        (served at ``GET /v1/slo``; folds into ``/v1/healthz``). Pass
+        ``()`` to declare none (the tracker then reports no routes).
+    exemplar_slow_n / exemplar_errors:
+        Per-route tail-exemplar retention: span trees of the slowest
+        ``exemplar_slow_n`` requests plus the last ``exemplar_errors``
+        error responses (``GET /v1/debug/exemplars``).
+        ``exemplar_slow_n=0`` disables capture entirely.
+    usage_flush_interval:
+        Seconds between persistent usage-ledger flushes (the
+        ``.usage-ledger.json`` beside each store root;
+        :mod:`repro.service.usage`). The ledger replaces the old
+        process-local hit counters behind ``/v1/artifacts``.
+    telemetry_cap:
+        Max ``kind: "telemetry"`` snapshots retained per store root;
+        :meth:`persist_telemetry` prunes the oldest beyond it (the cap
+        also folds into the ``gc`` CLI's retention plan).
     """
 
     def __init__(
@@ -237,6 +281,11 @@ class Gateway:
         lru_size: int = 256,
         telemetry_interval: float = 0.0,
         resilience: Union[GatewayResilience, None, str] = "default",
+        slo_objectives: Sequence[SLOObjective] = DEFAULT_OBJECTIVES,
+        exemplar_slow_n: int = 8,
+        exemplar_errors: int = 32,
+        usage_flush_interval: float = 60.0,
+        telemetry_cap: int = 32,
     ):
         if isinstance(roots, (str, os.PathLike)):
             roots = [roots]
@@ -252,6 +301,20 @@ class Gateway:
         if resilience == "default":
             resilience = GatewayResilience()
         self.resilience: Optional[GatewayResilience] = resilience
+        if telemetry_cap < 0:
+            raise ValueError("telemetry_cap must be >= 0")
+        self.telemetry_cap = int(telemetry_cap)
+        self.slo = SLOTracker(slo_objectives)
+        self.exemplars: Optional[ExemplarStore] = (
+            ExemplarStore(exemplar_slow_n, exemplar_errors)
+            if exemplar_slow_n > 0 else None
+        )
+        #: per-store-root persistent usage ledgers (the durable hit/byte
+        #: accounting behind /v1/artifacts and the gc retention plan)
+        self.usage: Dict[str, UsageLedger] = {
+            s.root: UsageLedger(s.root, flush_interval_s=usage_flush_interval)
+            for s in self.stores
+        }
         self._t0_mono = time.monotonic()  # uptime basis (NTP-step immune)
         self._telemetry_mu = threading.Lock()
         self._telemetry_last = time.monotonic()
@@ -290,6 +353,7 @@ class Gateway:
                 del self._pool[key]
             for key in [k for k in self._portfolio_pool if k not in index]:
                 del self._portfolio_pool[key]
+            M_POOL_SERVERS.set(len(self._pool) + len(self._portfolio_pool))
         return len(index)
 
     def keys(self) -> List[str]:
@@ -298,22 +362,25 @@ class Gateway:
 
     def entries(self) -> List[Dict[str, Any]]:
         """Routing rows (sans store handles) -- the ``/v1/artifacts``
-        payload. Each row carries advisory ``hits`` / ``last_access``
-        fields sourced from the live metrics registry (queries routed to
-        that artifact since process start; ``last_access`` is unix seconds
-        or None). Advisory means: process-local, reset on restart, and
-        deliberately excluded from the canonical wire byte-identity
-        surface (only ``/v1/query`` answers carry that guarantee)."""
+        payload. Each row carries ``hits`` / ``bytes`` / ``last_access``
+        sourced from the persistent usage ledger beside its store root
+        (:mod:`repro.service.usage`): buffered deltas merged over what
+        the last flush persisted, so the counts survive restarts. The
+        fields stay advisory in the wire sense -- deliberately excluded
+        from the canonical byte-identity surface (only ``/v1/query``
+        answers carry that guarantee)."""
         with self._mu:
             rows = [
                 {k: v for k, v in row.items() if k != "store"}
                 for row in self._index.values()
             ]
+            roots = {k: row["store"].root for k, row in self._index.items()}
+        snaps = {root: ledger.snapshot() for root, ledger in self.usage.items()}
         for row in rows:
-            hits = _M_ART_REQUESTS.get(artifact=row["key"])
-            last = _M_ART_LAST.get(artifact=row["key"])
-            row["hits"] = int(hits.value) if hits is not None else 0
-            row["last_access"] = last.value if last is not None else None
+            rec = snaps.get(roots.get(row["key"], ""), {}).get(row["key"])
+            row["hits"] = int(rec["hits"]) if rec else 0
+            row["bytes"] = int(rec["bytes"]) if rec else 0
+            row["last_access"] = rec["last_access"] if rec else None
         return rows
 
     def __len__(self) -> int:
@@ -511,6 +578,7 @@ class Gateway:
             while len(self._pool) > self.pool_size:
                 self._pool.popitem(last=False)  # in-flight queries hold refs
                 self.stats["pool_evictions"] += 1
+            M_POOL_SERVERS.set(len(self._pool) + len(self._portfolio_pool))
         return srv
 
     def portfolio_server_for(self, key: str) -> PortfolioServer:
@@ -566,15 +634,50 @@ class Gateway:
             while len(self._portfolio_pool) > self.pool_size:
                 self._portfolio_pool.popitem(last=False)
                 self.stats["pool_evictions"] += 1
+            M_POOL_SERVERS.set(len(self._pool) + len(self._portfolio_pool))
         return srv
 
     # ---- queries ----------------------------------------------------------
     def _note_artifact(self, key: str, dispatch_s: float, n: int = 1) -> None:
-        """Per-artifact hit accounting behind ``/v1/artifacts`` rows and
-        the persisted telemetry snapshots."""
+        """Per-artifact hit accounting: the live metrics registry (the
+        telemetry snapshots) plus the persistent usage ledger (the
+        ``/v1/artifacts`` rows and the ``gc`` retention plan). The single
+        choke point for routed-query hits, so the two can never double
+        count. No-ops under the ``REPRO_OBS_DISABLED`` kill switch."""
         _M_ART_REQUESTS.labels(artifact=key).inc(n)
         _M_ART_LAST.labels(artifact=key).set(time.time())
         _M_ART_SECONDS.labels(artifact=key).observe(dispatch_s)
+        if _REG.disabled:
+            return
+        with self._mu:
+            row = self._index.get(key)
+            root = row["store"].root if row is not None else None
+        ledger = self.usage.get(root) if root is not None else None
+        if ledger is not None:
+            ledger.record(key, n=n, client=_CLIENT_BUCKET.get())
+            ledger.maybe_flush()
+
+    def _note_bytes(self, key: str, nbytes: int) -> None:
+        """Response-byte accounting for the single-answer routes (the
+        batched route's shared envelope is not attributed per artifact)."""
+        if _REG.disabled:
+            return
+        with self._mu:
+            row = self._index.get(key)
+            root = row["store"].root if row is not None else None
+        ledger = self.usage.get(root) if root is not None else None
+        if ledger is not None:
+            ledger.record(key, n=0, nbytes=nbytes)
+
+    def flush_usage(self) -> None:
+        """Flush every store root's usage ledger now (shutdown path; the
+        request path flushes on its own interval). Never raises."""
+        for ledger in self.usage.values():
+            try:
+                ledger.flush()
+            except Exception as e:  # noqa: BLE001 - accounting, never fatal
+                _LOG.warning("usage_flush_failed",
+                             error=f"{type(e).__name__}: {e}")
 
     def query(
         self,
@@ -737,9 +840,11 @@ class Gateway:
         return results
 
     def health(self) -> Dict[str, Any]:
+        slo_status = self.slo.status()  # own lock; computed outside _mu
         with self._mu:
             return {
                 "ok": True,
+                "slo": slo_status,
                 "uptime_s": round(time.monotonic() - self._t0_mono, 3),
                 "artifacts": len(self._index),
                 "pooled_servers": len(self._pool),
@@ -790,7 +895,27 @@ class Gateway:
         )
         _LOG.info("telemetry_persisted", key=art.key,
                   artifacts=len(payload["artifacts"]))
+        self._prune_telemetry(store)
         return art.key
+
+    def _prune_telemetry(self, store: ArtifactStore) -> None:
+        """Enforce ``telemetry_cap``: drop the oldest ``kind:
+        "telemetry"`` snapshots (by their own ``collected_at``) beyond
+        the cap, so a long-lived gateway's snapshot *series* stays a
+        series instead of an unbounded accretion."""
+        snaps: List[Tuple[float, str]] = []
+        for key in store.keys():
+            art = store.get(key)
+            if art is not None and art.kind == "telemetry":
+                snaps.append((float(art.payload.get("collected_at") or 0.0), key))
+        excess = len(snaps) - self.telemetry_cap
+        if excess <= 0:
+            return
+        snaps.sort()
+        for _, key in snaps[:excess]:
+            store.delete(key)
+        _LOG.info("telemetry_pruned", dropped=excess, cap=self.telemetry_cap)
+        self.refresh()
 
     def _maybe_persist_telemetry(self) -> None:
         """Interval-gated :meth:`persist_telemetry` on the request path
@@ -841,6 +966,16 @@ class _Handler(BaseHTTPRequestHandler):
     server_version = "repro-gateway/1"
     protocol_version = "HTTP/1.1"  # keep-alive: clients reuse connections
 
+    def setup(self) -> None:
+        super().setup()
+        M_CONNECTIONS.inc()
+
+    def finish(self) -> None:
+        try:
+            super().finish()
+        finally:
+            M_CONNECTIONS.dec()
+
     def log_message(self, fmt, *args):  # noqa: ARG002
         # the stdlib's per-request stderr line, rerouted through the
         # structured logger at DEBUG: silent by default (NullHandler /
@@ -865,6 +1000,7 @@ class _Handler(BaseHTTPRequestHandler):
         content_type="application/json",
         headers: Optional[Mapping[str, str]] = None,
     ) -> None:
+        self._last_status = status  # the SLO recorder reads it in finally
         self.send_response(status)
         self.send_header("Content-Type", content_type)
         self.send_header("Content-Length", str(len(body)))
@@ -885,6 +1021,7 @@ class _Handler(BaseHTTPRequestHandler):
         # one request per connection on failures: simpler client recovery
         # than reasoning about keep-alive state after an error
         self.close_connection = True
+        self._ex_code = code  # the error-exemplar offer reads it in finally
         _M_ERRORS.labels(route=self._route(), code=code).inc()
         _LOG.debug("request_error", route=self._route(), code=code,
                    status=status, message=message)
@@ -922,10 +1059,8 @@ class _Handler(BaseHTTPRequestHandler):
         """The ``/v1/metrics`` payload: Prometheus text by default,
         canonical JSON via ``?format=json`` or ``Accept:
         application/json`` (explicit ``?format=`` wins)."""
-        fmt = (parse_qs(query).get("format") or [""])[0]
-        if not fmt:
-            accept = self.headers.get("Accept", "")
-            fmt = "json" if "application/json" in accept else "prometheus"
+        fmt = self._scrape_format(query)
+        sample_process()  # lazy process gauges: refreshed per scrape
         reg = _REG
         if fmt == "json":
             return reg.render_json(), "application/json"
@@ -936,9 +1071,36 @@ class _Handler(BaseHTTPRequestHandler):
             f"unknown metrics format {fmt!r} (want 'prometheus' or 'json')"
         )
 
+    def _scrape_format(self, query: str) -> str:
+        """Shared format negotiation of the scrape endpoints
+        (``/v1/metrics``, ``/v1/slo``): explicit ``?format=`` wins over
+        the Accept header; Prometheus text is the default."""
+        fmt = (parse_qs(query).get("format") or [""])[0]
+        if not fmt:
+            accept = self.headers.get("Accept", "")
+            fmt = "json" if "application/json" in accept else "prometheus"
+        return fmt
+
+    def _slo_body(self, query: str) -> Tuple[bytes, str]:
+        """The ``/v1/slo`` payload: the burn-rate gauges as Prometheus
+        text by default, the full wire-enveloped report via
+        ``?format=json`` (the canonical rendering the golden corpus
+        pins)."""
+        fmt = self._scrape_format(query)
+        slo = self.gateway.slo
+        if fmt == "json":
+            return wire.encode_slo_response(slo.report()), "application/json"
+        if fmt in ("prometheus", "text"):
+            return (slo.render_prometheus(),
+                    "text/plain; version=0.0.4; charset=utf-8")
+        raise wire.WireError(
+            f"unknown slo format {fmt!r} (want 'prometheus' or 'json')"
+        )
+
     def do_GET(self) -> None:  # noqa: N802 - BaseHTTPRequestHandler API
         split = urlsplit(self.path)
         t0 = time.perf_counter()
+        self._last_status: Optional[int] = None
         try:
             if split.path == "/v1/healthz":
                 body = json.dumps(self.gateway.health(), sort_keys=True).encode()
@@ -952,34 +1114,67 @@ class _Handler(BaseHTTPRequestHandler):
             elif split.path == "/v1/metrics":
                 body, content_type = self._metrics_body(split.query)
                 self._send(200, body, content_type=content_type)
+            elif split.path == "/v1/slo":
+                body, content_type = self._slo_body(split.query)
+                self._send(200, body, content_type=content_type)
+            elif split.path == "/v1/debug/exemplars":
+                self._send_exemplars(split.query)
             else:
                 self._send_error(wire.ERROR_HTTP_STATUS["not_found"], "not_found",
                                  f"no such endpoint {split.path!r}")
         except wire.WireError as e:
             self._send_error(wire.ERROR_HTTP_STATUS.get(e.code, 400), e.code, str(e))
+        except GatewayError as e:
+            self._send_gateway_error(e)
         except BrokenPipeError:
             pass
         except Exception as e:  # noqa: BLE001 - boundary: never leak a traceback
             self._send_error(500, "internal", f"{type(e).__name__}: {e}")
         finally:
             route = self._route()
+            dt = time.perf_counter() - t0
             _M_REQUESTS.labels(route=route).inc()
-            _M_REQUEST_SECONDS.labels(route=route).observe(
-                time.perf_counter() - t0
+            _M_REQUEST_SECONDS.labels(route=route).observe(dt)
+            status = getattr(self, "_last_status", None)
+            if status is not None and not _REG.disabled:
+                self.gateway.slo.record(route, dt, ok=status < 500)
+
+    def _send_exemplars(self, query: str) -> None:
+        """GET /v1/debug/exemplars[?route=/v1/query]: retained span trees
+        of the slowest/error requests, cross-referenced by trace id."""
+        route = (parse_qs(query).get("route") or [None])[0]
+        if route is not None and route not in _ROUTES:
+            raise UnknownRouteError(
+                f"unknown route {route!r} (this gateway serves "
+                f"{', '.join(_ROUTES)})"
             )
+        ex = self.gateway.exemplars
+        snap = (ex.snapshot(route) if ex is not None
+                else {"slow_n": 0, "max_errors": 0, "routes": {}})
+        self._send(200, wire.encode_exemplars_response(snap))
+
+    def _capture(self) -> bool:
+        """Whether this request should record an internal span tree for
+        the tail-exemplar ring even though the client didn't ask for one
+        (never perturbs response bytes; disabled with the kill switch so
+        the obs-overhead A/B measures the whole capture path)."""
+        return self.gateway.exemplars is not None and not _REG.disabled
 
     def _answer_query(self, data: bytes) -> None:
         """POST /v1/query: the one route with opt-in tracing. Untraced
-        requests take the exact pre-tracing encode path (byte-identity);
-        traced requests record a span tree and return it in the (additive)
-        ``trace`` envelope field, under the echoed/minted trace id."""
+        requests encode with ``trace=None`` -- the exact pre-tracing
+        bytes (byte-identity) -- even when exemplar capture forces an
+        *internal* span tree; traced requests return the tree in the
+        (additive) ``trace`` envelope field, under the echoed/minted
+        trace id."""
         request, artifact, route_sel, traced, env_ms = \
             wire.decode_request_full(data)
         deadline = self._request_deadline(env_ms)
         tid = _clean_trace_id(self.headers.get(TRACE_HEADER))
+        self._ex_tid = tid
         tree = None
         with deadline_scope(deadline):
-            if traced:
+            if traced or self._capture():
                 with trace("gateway.request", trace_id=tid,
                            route="/v1/query") as root:
                     response = self.gateway.query(
@@ -990,9 +1185,11 @@ class _Handler(BaseHTTPRequestHandler):
                 response = self.gateway.query(
                     request, artifact=artifact, route=route_sel
                 )
+        self._ex_tree = tree
         with _M_ENCODE_SECONDS.time():
-            body = wire.encode_response(response, trace=tree)
+            body = wire.encode_response(response, trace=tree if traced else None)
         self._send(200, body, headers={TRACE_HEADER: tid})
+        self.gateway._note_bytes(response.artifact_key, len(body))
 
     def _answer_route(self, data: bytes) -> None:
         """POST /v1/route: canonical-byte answers like /v1/query (the
@@ -1001,13 +1198,23 @@ class _Handler(BaseHTTPRequestHandler):
         request, artifact, route_sel, env_ms = wire.decode_route_request_full(data)
         deadline = self._request_deadline(env_ms)
         tid = _clean_trace_id(self.headers.get(TRACE_HEADER))
+        self._ex_tid = tid
         with deadline_scope(deadline):
-            response = self.gateway.route(
-                request, artifact=artifact, route=route_sel
-            )
+            if self._capture():
+                with trace("gateway.request", trace_id=tid,
+                           route="/v1/route") as root:
+                    response = self.gateway.route(
+                        request, artifact=artifact, route=route_sel
+                    )
+                self._ex_tree = root.root_tree()
+            else:
+                response = self.gateway.route(
+                    request, artifact=artifact, route=route_sel
+                )
         with _M_ENCODE_SECONDS.time():
             body = wire.encode_route_response(response)
         self._send(200, body, headers={TRACE_HEADER: tid})
+        self.gateway._note_bytes(response.portfolio_key, len(body))
 
     def _answer_query_many(self, data: bytes) -> None:
         """POST /v1/query_many: an envelope-level deadline bounds the
@@ -1015,14 +1222,28 @@ class _Handler(BaseHTTPRequestHandler):
         ``deadline_exceeded`` pairs; the batch itself still answers 200)."""
         queries, env_ms = wire.decode_request_many_full(data)
         deadline = self._request_deadline(env_ms)
-        with deadline_scope(deadline):
-            results = self.gateway.query_many(queries)
         tid = _clean_trace_id(self.headers.get(TRACE_HEADER))
+        self._ex_tid = tid
+        with deadline_scope(deadline):
+            if self._capture():
+                with trace("gateway.request", trace_id=tid,
+                           route="/v1/query_many") as root:
+                    results = self.gateway.query_many(queries)
+                self._ex_tree = root.root_tree()
+            else:
+                results = self.gateway.query_many(queries)
         self._send(200, wire.encode_response_many(results),
                    headers={TRACE_HEADER: tid})
 
     def do_POST(self) -> None:  # noqa: N802
         t0 = time.perf_counter()
+        self._last_status: Optional[int] = None
+        self._ex_tid: Optional[str] = None
+        self._ex_tree: Optional[Dict[str, Any]] = None
+        self._ex_code: Optional[str] = None
+        client_token = _CLIENT_BUCKET.set(
+            self.headers.get(CLIENT_HEADER) or self.client_address[0]
+        )
         try:
             # always drain the body first: with keep-alive, unread body
             # bytes would be misparsed as the connection's next request line
@@ -1074,11 +1295,25 @@ class _Handler(BaseHTTPRequestHandler):
         except Exception as e:  # noqa: BLE001 - boundary: never leak a traceback
             self._send_error(500, "internal", f"{type(e).__name__}: {e}")
         finally:
+            _CLIENT_BUCKET.reset(client_token)
             route = self._route()
+            dt = time.perf_counter() - t0
             _M_REQUESTS.labels(route=route).inc()
-            _M_REQUEST_SECONDS.labels(route=route).observe(
-                time.perf_counter() - t0
-            )
+            _M_REQUEST_SECONDS.labels(route=route).observe(dt)
+            status = getattr(self, "_last_status", None)
+            if status is not None and not _REG.disabled:
+                gw = self.gateway
+                gw.slo.record(route, dt, ok=status < 500)
+                if gw.exemplars is not None and (
+                    route in _EXEMPLAR_ROUTES or status >= 400
+                ):
+                    tid = self._ex_tid or _clean_trace_id(
+                        self.headers.get(TRACE_HEADER)
+                    )
+                    gw.exemplars.offer(
+                        route, tid, dt, status,
+                        code=self._ex_code, trace=self._ex_tree,
+                    )
 
 
 class GatewayHTTPServer(ThreadingHTTPServer):

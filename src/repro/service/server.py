@@ -187,7 +187,8 @@ class _BaseServer:
                 self.stats["batches"] += 1
                 self.stats["max_batch"] = max(self.stats["max_batch"], 1)
             _M_BATCH_SIZE.observe(1)
-            return engine.query(request)
+            with span("server.answer", key=self.key[:12], batched=0):
+                return engine.query(request)
         slot = _Slot(request)
         with self._batch_mu:
             self._pending.append(slot)
@@ -218,7 +219,7 @@ class _BaseServer:
                     # leader's thread -- span trees of traced followers
                     # show their rendezvous wait, not this matmul
                     faults.fire("server.batch")
-                    with span("batch.answer", size=len(batch)):
+                    with span("batch.answer", size=len(batch), key=self.key[:12]):
                         responses = engine.answer_many([s.request for s in batch])
                     for s, r in zip(batch, responses):
                         s.response = r
@@ -269,7 +270,8 @@ class _BaseServer:
             self.stats["batches"] += 1
             self.stats["max_batch"] = max(self.stats["max_batch"], len(requests))
         _M_BATCH_SIZE.observe(len(requests))
-        return engine.answer_many(list(requests))
+        with span("server.answer_many", size=len(requests), key=self.key[:12]):
+            return engine.answer_many(list(requests))
 
 
 class CodesignServer(_BaseServer):

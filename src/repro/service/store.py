@@ -796,6 +796,20 @@ class ArtifactStore:
             upgraded.append(key)
         return upgraded
 
+    def delete(self, key: str) -> bool:
+        """Remove one stored artifact (the GC apply path). Runs under the
+        key's build lock so a concurrent builder either finishes before
+        the removal or re-stages afterward -- never loses half its files.
+        Returns True when an artifact directory was removed. Open mmap
+        handles on the old files stay valid on POSIX (the inode lives
+        until the last reader closes)."""
+        with self.build_lock(key):
+            path = self._path(key)
+            if not os.path.exists(os.path.join(path, "manifest.json")):
+                return False
+            shutil.rmtree(path)
+        return True
+
     def keys(self) -> List[str]:
         """Sorted content keys of every (complete) stored artifact."""
         return sorted(

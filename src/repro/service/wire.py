@@ -75,6 +75,10 @@ __all__ = [
     "decode_route_request_full",
     "encode_route_response",
     "decode_route_response",
+    "encode_slo_response",
+    "decode_slo_response",
+    "encode_exemplars_response",
+    "decode_exemplars_response",
     "encode_error",
 ]
 
@@ -685,6 +689,60 @@ def decode_response_many(
                 )
             )
     return out
+
+
+# ---------------------------------------------------------------------------
+# observability envelopes (GET /v1/slo, GET /v1/debug/exemplars)
+# ---------------------------------------------------------------------------
+def encode_slo_response(report: Mapping[str, Any]) -> bytes:
+    """Serialize an SLO report (:meth:`repro.obs.slo.SLOTracker.report`)
+    as the ``GET /v1/slo?format=json`` body. Canonical bytes, same
+    determinism contract as every other envelope -- the golden corpus
+    pins this encoding."""
+    return _dumps({"v": WIRE_VERSION, "ok": True, "slo": dict(report)})
+
+
+def decode_slo_response(data: bytes, http_status: int = 0) -> Dict[str, Any]:
+    """Bytes -> the SLO report dict; a structured error envelope raises
+    :class:`RemoteError`."""
+    obj = _loads(data)
+    _check_version(obj, "response envelope")
+    if not obj.get("ok"):
+        err = obj.get("error") or {}
+        raise RemoteError(
+            str(err.get("code", "unknown")),
+            str(err.get("message", "(no message)")),
+            http_status,
+        )
+    slo = obj.get("slo")
+    if not isinstance(slo, dict):
+        raise WireError("'slo' must be an object (the SLO report)")
+    return _unjsonify(slo)
+
+
+def encode_exemplars_response(payload: Mapping[str, Any]) -> bytes:
+    """Serialize a tail-exemplar snapshot
+    (:meth:`repro.obs.exemplar.ExemplarStore.snapshot`) as the
+    ``GET /v1/debug/exemplars`` body."""
+    return _dumps({"v": WIRE_VERSION, "ok": True, "exemplars": dict(payload)})
+
+
+def decode_exemplars_response(data: bytes, http_status: int = 0) -> Dict[str, Any]:
+    """Bytes -> the exemplar snapshot dict; a structured error envelope
+    raises :class:`RemoteError`."""
+    obj = _loads(data)
+    _check_version(obj, "response envelope")
+    if not obj.get("ok"):
+        err = obj.get("error") or {}
+        raise RemoteError(
+            str(err.get("code", "unknown")),
+            str(err.get("message", "(no message)")),
+            http_status,
+        )
+    ex = obj.get("exemplars")
+    if not isinstance(ex, dict):
+        raise WireError("'exemplars' must be an object (the exemplar snapshot)")
+    return _unjsonify(ex)
 
 
 def encode_error(code: str, message: str) -> bytes:

@@ -146,6 +146,23 @@ def _metrics_json() -> bytes:
     return reg.render_json()
 
 
+def _slo_json() -> bytes:
+    # a fixed-clock SLOTracker fed a fixed request mix: the canonical
+    # /v1/slo?format=json rendering (burn rates, latency estimates,
+    # per-route status), no wall clock anywhere
+    from repro.obs.slo import SLOTracker
+
+    t = [0.0]
+    tracker = SLOTracker(clock=lambda: t[0])
+    for i in range(20):
+        t[0] = float(i)
+        tracker.record("/v1/query", 0.004 + 0.001 * (i % 3), ok=True)
+        tracker.record("/v1/route", 0.002, ok=(i % 10 != 0))
+    t[0] = 30.0
+    tracker.record("/v1/query", 0.250, ok=False)  # one slow 5xx outlier
+    return wire.encode_slo_response(tracker.report(now=30.0))
+
+
 CORPUS = {
     "query_request.json": _query_request,
     "query_many_request.json": _query_many_request,
@@ -155,6 +172,7 @@ CORPUS = {
     "route_response.json": _route_response,
     "error.json": _error,
     "metrics.json": _metrics_json,
+    "slo.json": _slo_json,
 }
 
 
